@@ -1,0 +1,158 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the
+dry-run artifacts (experiments/dryrun/*.json).
+
+  compute term    = MODEL_FLOPS / (chips * 197 TFLOP/s bf16)
+  memory term     = min-required HBM bytes / (chips * 819 GB/s)
+  collective term = wire bytes per device / (4 links * 50 GB/s ICI)
+
+Sources + scan-body caveat (DESIGN.md §7): XLA `cost_analysis()` counts a
+`lax.scan` body ONCE, so raw per-device HLO FLOPs/bytes are lower bounds;
+they are recorded as `hlo_*_raw`.  The roofline uses:
+  * MODEL_FLOPS — 6·N·D train / 2·N_active·D decode+prefill, plus the
+    attention O(S^2) term (window-capped) — the standard MFU numerator;
+  * analytic minimum HBM traffic — parameter+optimizer state movement,
+    saved-activation write+read, KV-cache read/write — the roofline
+    memory floor;
+  * collective wire bytes from the HLO parser, which applies while-loop
+    trip-count multipliers natively (repro.launch.hlo_analysis).
+
+`roofline_fraction` = compute_term / max(all three terms): the fraction of
+peak FLOP/s the cell would realise if it hit whichever roof binds.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW_PER_LINK = 50e9       # bytes/s / link
+N_LINKS = 4                  # 2D torus: 4 links/chip
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+_SHAPE = dict(train_4k=(4096, 256, "train"),
+              prefill_32k=(32768, 32, "prefill"),
+              decode_32k=(32768, 128, "decode"),
+              long_500k=(524288, 1, "decode"))
+
+
+def _analytic(arch: str, shape: str) -> Dict[str, float]:
+    """MODEL_FLOPS + minimum HBM traffic for one cell (whole system)."""
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    S, B, kind = _SHAPE[shape]
+    pc = cfg.param_counts()
+    n_embed = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n_active = max(pc["active"] - n_embed, 1.0)
+    n_total = pc["total"]
+    pbytes = n_total * 2.0                      # bf16 weights
+    kv_bt = cfg.kv_bytes_per_token()
+    d, L = cfg.d_model, cfg.n_layers
+    attn_layers = sum(1 for k in cfg.layer_kinds() if k in ("attn", "xattn"))
+    win = cfg.sliding_window or S
+
+    if kind == "train":
+        T = S * B
+        s_eff = min(S, win) / 2.0
+        flops = 6.0 * n_active * T \
+            + 12.0 * T * s_eff * cfg.n_heads * cfg.head_dim * attn_layers
+        # params r/w (bf16) + grads + Adam m,v r/w (f32) + activation
+        # stacks (write fwd + read bwd) + logits r/w
+        hbm = (pbytes * 2 + n_total * (4 + 16)
+               + 4.0 * T * d * L * 2.0 + 4.0 * T * cfg.vocab)
+    elif kind == "prefill":
+        T = S * B
+        s_eff = min(S, win) / 2.0
+        flops = 2.0 * n_active * T \
+            + 4.0 * T * s_eff * cfg.n_heads * cfg.head_dim * attn_layers
+        hbm = pbytes + 2.0 * T * d * L * 2.0 + T * kv_bt
+    else:  # decode: one token per request against an S-token cache
+        T = B
+        flops = 2.0 * n_active * T \
+            + 4.0 * T * min(S, win) * cfg.n_heads * cfg.head_dim * attn_layers
+        state_bytes = cfg.ssm_state_bytes()
+        hbm = (pbytes + B * min(S, win) * kv_bt + B * kv_bt
+               + 2.0 * B * state_bytes)
+    return dict(model_flops=flops, hbm_bytes=hbm, tokens=T)
+
+
+def roofline_terms(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "OK":
+        return None
+    n_dev = rec["n_devices"]
+    a = _analytic(rec["arch"], rec["shape"])
+    compute_s = a["model_flops"] / (n_dev * PEAK_FLOPS)
+    memory_s = a["hbm_bytes"] / (n_dev * HBM_BW)
+    wire = rec["collectives"]["total_wire_bytes"]  # per device
+    collective_s = wire / (N_LINKS * ICI_BW_PER_LINK)
+    terms = dict(compute_s=compute_s, memory_s=memory_s,
+                 collective_s=collective_s)
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    raw_flops = rec["cost"]["flops_per_device"] * n_dev
+    trips = rec["collectives"].get("trip_counts", {})
+    return dict(arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+                n_devices=n_dev, **terms, dominant=dominant,
+                roofline_fraction=min(compute_s / max(bound_s, 1e-18), 1.0),
+                model_flops=a["model_flops"],
+                hbm_bytes=a["hbm_bytes"],
+                hlo_flops_raw=raw_flops,
+                hlo_bytes_raw=rec["cost"]["bytes_per_device"] * n_dev,
+                useful_ratio=min(a["model_flops"] / max(raw_flops, 1.0),
+                                 99.0),
+                peak_gib=rec["memory"]["peak_bytes"] / 2 ** 30,
+                fits_16gib=bool(rec["memory"]["peak_bytes"] <= 16 * 2 ** 30),
+                wire_gib=wire / 2 ** 30,
+                max_trip=max(trips.values()) if trips else 1)
+
+
+def load_all(dryrun_dir: str = DRYRUN_DIR) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "SKIP":
+            out.append(dict(arch=rec["arch"], shape=rec["shape"],
+                            mesh=rec["mesh"], dominant="SKIP",
+                            reason=rec.get("reason", "")))
+            continue
+        t = roofline_terms(rec)
+        if t:
+            out.append(t)
+        elif rec.get("status") == "FAIL":
+            out.append(dict(arch=rec["arch"], shape=rec["shape"],
+                            mesh=rec["mesh"], dominant="FAIL",
+                            reason=rec.get("error", "")))
+    return out
+
+
+def bench_rows() -> List[tuple]:
+    rows = []
+    table = load_all()
+    os.makedirs("experiments/tables", exist_ok=True)
+    with open("experiments/tables/roofline.json", "w") as f:
+        json.dump(table, f, indent=1)
+    ok = [t for t in table if t["dominant"] not in ("SKIP", "FAIL")]
+    n_skip = sum(1 for t in table if t["dominant"] == "SKIP")
+    n_fail = sum(1 for t in table if t["dominant"] == "FAIL")
+    rows.append(("roofline.cells_ok", 0.0, len(ok)))
+    rows.append(("roofline.cells_skip", 0.0, n_skip))
+    rows.append(("roofline.cells_fail", 0.0, n_fail))
+    if ok:
+        pod = [t for t in ok if t["mesh"] == "pod16x16"]
+        for t in sorted(pod, key=lambda r: r["roofline_fraction"])[:5]:
+            rows.append((f"roofline.worst.{t['arch']}.{t['shape']}", 0.0,
+                         round(t["roofline_fraction"], 5)))
+        train = [t for t in pod if t["shape"] == "train_4k"]
+        for t in sorted(train, key=lambda r: -r["roofline_fraction"])[:3]:
+            rows.append((f"roofline.best_train.{t['arch']}", 0.0,
+                         round(t["roofline_fraction"], 4)))
+        frac = sorted(t["roofline_fraction"] for t in pod)
+        rows.append(("roofline.median_fraction_pod", 0.0,
+                     round(float(frac[len(frac) // 2]), 4)))
+        coll = [t for t in pod if t["dominant"] == "collective_s"]
+        rows.append(("roofline.collective_bound_cells", 0.0, len(coll)))
+    return rows

@@ -1,0 +1,51 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV and writes full tables to
+experiments/tables/.  Budget via REPRO_BENCH_EPISODES (default 600/node;
+paper budget 4,613 — see examples/llama_highperf_dse.py).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import roofline, tables
+    from benchmarks.common import BENCH_EPISODES, emit
+
+    print(f"# repro benchmarks (episodes/node={BENCH_EPISODES})")
+    print("name,us_per_call,derived")
+    suites = [
+        ("table9", tables.table9_model_characteristics),
+        ("ceilings", tables.ceilings_eq21_24),
+        ("dse_throughput", tables.batch_eval_throughput),
+        ("table10_11", tables.tables10_11_per_node),
+        ("table12", tables.table12_power_breakdown),
+        ("table13", tables.table13_scaling_laws),
+        ("table15_16", tables.tables15_16_hetero),
+        ("table17_18", tables.tables17_18_cross_node),
+        ("table19", tables.table19_smolvlm),
+        ("table21", tables.table21_search_comparison),
+        ("roofline", roofline.bench_rows),
+    ]
+    failures = 0
+    t_start = time.time()
+    for name, fn in suites:
+        try:
+            t0 = time.time()
+            rows = fn()
+            emit(rows)
+            print(f"# {name}: {time.time() - t0:.1f}s")
+        except Exception as e:
+            failures += 1
+            print(f"# {name} FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    print(f"# total {time.time() - t_start:.1f}s, failures={failures}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

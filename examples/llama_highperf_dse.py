@@ -1,0 +1,30 @@
+"""Paper reproduction run: Llama 3.1 8B, high-performance mode, all 7
+process nodes at the full 4,613-episode budget (paper Table 14).
+~8 min/node on 1 CPU core; use --episodes to shorten.
+
+    PYTHONPATH=src python examples/llama_highperf_dse.py --episodes 4613
+"""
+import argparse
+
+from repro.launch.dse import run
+from repro.ppa.nodes import NODES
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--episodes", type=int, default=4613)
+    ap.add_argument("--nodes", default="all")
+    ap.add_argument("--out", default="experiments/dse_full")
+    a = ap.parse_args()
+    nodes = list(NODES) if a.nodes == "all" else [int(x) for x in a.nodes.split(",")]
+    rows = run("llama3.1-8b", nodes=nodes, mode="high-performance",
+               episodes=a.episodes, method="sac", out_dir=a.out)
+    print("\nnode  mesh      tok/s     power(W)  area(mm2)  score")
+    for r in rows:
+        print(f"{r['node_nm']:>3}nm {r['mesh']:>7} {r['tok_s']:>9.0f} "
+              f"{r['power_mw']/1e3:>9.2f} {r['area_mm2']:>9.0f} "
+              f"{r['ppa_score']:>6.3f}")
+
+
+if __name__ == "__main__":
+    main()

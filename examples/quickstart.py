@@ -1,0 +1,56 @@
+"""Quickstart: run the RL-driven ASIC design-space exploration for
+Llama 3.1 8B at 3nm with a small episode budget, print the discovered
+configuration and its PPA, and compare against the paper's anchor.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.search import SearchConfig, run_sac
+from repro.ppa import config_space as cs
+from repro.ppa.analytic import evaluate_jit, metrics_dict, node_vector
+from repro.ppa.nodes import node_params
+from repro.workload.extract import extract
+
+
+def main() -> None:
+    # 1. workload features from the JAX model config (paper Stage 3)
+    cfg = get_config("llama3.1-8b")
+    wl = extract(cfg, seq_len=2048, batch=3)
+    print(f"workload: {cfg.name}, {wl.f('params_total')/1e9:.2f}B params, "
+          f"{wl.graph.n_ops} graph ops, KV {wl.f('kv_bytes_per_token')/1024:.0f} KB/tok")
+
+    # 2. paper anchor: evaluate the published 3nm configuration
+    anchor = cs.paper_llama_3nm_config()
+    anchor[cs.IDX["allreduce_frac"]] = 0.5
+    anchor[cs.IDX["stream_in"]] = anchor[cs.IDX["stream_out"]] = 0.0
+    m = metrics_dict(evaluate_jit(jnp.asarray(anchor),
+                                  jnp.asarray(wl.features),
+                                  jnp.asarray(node_vector(node_params(3)))))
+    print(f"paper 3nm anchor: {m['tok_s']:.0f} tok/s (paper: 29,809), "
+          f"{m['power_mw']/1e3:.1f} W (51.4), {m['area_mm2']:.0f} mm2 (648)")
+
+    # 3. run a short SAC search (paper budget: 4,613 episodes; see
+    #    examples/llama_highperf_dse.py for the full-budget run)
+    res = run_sac(wl, 3, high_perf=True,
+                  search=SearchConfig(episodes=400, warmup=200,
+                                      update_every=4, verbose=True))
+    print(f"\nsearch: {res.episodes_run} episodes, "
+          f"{res.feasible_count} feasible, Pareto archive {len(res.archive)}")
+    if res.best_cfg is not None:
+        d = cs.to_dict(res.best_cfg)
+        print(f"best: mesh {d['mesh_w']:.0f}x{d['mesh_h']:.0f}, "
+              f"VLEN {d['vlen']:.0f}, f={d['freq_frac']*1e3:.0f} MHz-frac, "
+              f"tok/s {res.metric('tok_s'):.0f}, "
+              f"power {res.metric('power_mw')/1e3:.2f} W, "
+              f"area {res.metric('area_mm2'):.0f} mm2")
+    if res.hetero is not None:
+        s = res.hetero.summary()
+        print(f"per-TCC heterogeneity: VLEN {s['VLEN']['min']:.0f}-"
+              f"{s['VLEN']['max']:.0f} ({s['VLEN']['unique']} distinct), "
+              f"WMEM {s['WMEM_KB']['min']:.0f}-{s['WMEM_KB']['max']:.0f} KB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Batched serving example: prefill + greedy decode with KV caches for any
+assigned architecture (reduced configs on CPU).
+
+    PYTHONPATH=src python examples/serve_batch.py --arch mixtral-8x7b
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    a = ap.parse_args()
+    serve(a.arch, reduced=True, batch=a.batch, prompt_len=a.prompt_len,
+          gen_tokens=a.gen)
+
+
+if __name__ == "__main__":
+    main()

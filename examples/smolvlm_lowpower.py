@@ -1,0 +1,29 @@
+"""Paper §4.12: SmolVLM low-power mode across all 7 nodes — validates the
+<13 mW claim with the RL search (weights profile 0.2/0.6/0.2).
+
+    PYTHONPATH=src python examples/smolvlm_lowpower.py --episodes 600
+"""
+import argparse
+
+from repro.launch.dse import run
+from repro.ppa.nodes import NODES
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--episodes", type=int, default=600)
+    ap.add_argument("--out", default="experiments/dse_smolvlm")
+    a = ap.parse_args()
+    rows = run("smolvlm", nodes=list(NODES), mode="low-power",
+               episodes=a.episodes, method="sac", out_dir=a.out,
+               seq_len=512, batch=1)
+    ok = all(r["power_mw"] < 13.0 for r in rows)
+    print("\nnode  mesh    power(mW)  tok/s  area(mm2)")
+    for r in rows:
+        print(f"{r['node_nm']:>3}nm {r['mesh']:>6} {r['power_mw']:>8.2f} "
+              f"{r['tok_s']:>6.1f} {r['area_mm2']:>8.1f}")
+    print(f"\nALL NODES < 13 mW: {ok} (paper Table 19 claim)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""End-to-end training driver: trains the FULL smollm-135m (135M params,
+the assignment's small dense arch) on the deterministic synthetic LM task
+for a few hundred steps with checkpointing — loss visibly decreases.
+
+CPU note: full 135M on 1 core is slow; --reduced trains the reduced config
+quickly.  On a real pod the same script runs the production mesh.
+
+    PYTHONPATH=src python examples/train_smollm.py --steps 300 --reduced
+"""
+import argparse
+
+from repro.launch.train import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_smollm_ckpt")
+    a = ap.parse_args()
+    state, losses = train("smollm-135m", reduced=a.reduced, steps=a.steps,
+                          global_batch=a.batch, seq_len=a.seq,
+                          ckpt_dir=a.ckpt_dir, ckpt_every=100,
+                          resume="auto", log_every=20)
+    first = sum(losses[:10]) / max(len(losses[:10]), 1)
+    last = sum(losses[-10:]) / max(len(losses[-10:]), 1)
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"({'DECREASED' if last < first else 'no improvement'})")
+
+
+if __name__ == "__main__":
+    main()

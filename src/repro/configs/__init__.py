@@ -1,0 +1,5 @@
+from repro.configs.base import (ARCH_IDS, ArchConfig, MLAConfig, MoEConfig,
+                                MambaConfig, XLSTMConfig, get_config, get_reduced)
+
+__all__ = ["ARCH_IDS", "ArchConfig", "MLAConfig", "MoEConfig", "MambaConfig",
+           "XLSTMConfig", "get_config", "get_reduced"]

@@ -1,0 +1,62 @@
+"""Action space — paper Table 3: 30 continuous dims + 4 discrete mesh/SC
+deltas (5-way categorical each, {-2,-1,0,+1,+2}).
+
+Continuous layout (tanh-squashed to [-1, 1], applied as bounded deltas):
+  0-25 : deltas on design-vector fields 4..29 (config_space layout order:
+         fetch ... kv_window_frac) — the paper's "Continuous TCC Params",
+         "Memory/Load Partition", "Op-Partition", "Streaming" and
+         "Workload Partition" groups.
+  26-29: heterogeneity-spread controls [fetch, vlen, wmem, dmem] feeding the
+         post-RL per-TCC derivation (paper §3.3 "per-core vs global scope";
+         DESIGN.md interpretation note — the paper's 30-dim count includes
+         4 dims beyond the 26 named config deltas).
+
+Policy output is 80-dim: 20 discrete logits + 30 means + 30 log-stds
+(paper Fig. 2).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.ppa import config_space as cs
+
+N_CONT = 30
+N_DISC = 4                 # mesh_w, mesh_h, sc_x, sc_y deltas
+N_DISC_OPTIONS = 5         # {-2,-1,0,+1,+2}
+POLICY_OUT_DIM = N_DISC * N_DISC_OPTIONS + 2 * N_CONT  # 80
+
+# continuous action i (i<26) perturbs design field 4+i by
+# a_i * DELTA_FRAC * (HI-LO) per step.
+DELTA_FRAC = 0.08
+_CONT_FIELD_SLICE = slice(4, 4 + 26)
+CONT_SCALE = (cs.HI[_CONT_FIELD_SLICE] - cs.LO[_CONT_FIELD_SLICE]) * DELTA_FRAC
+
+DISC_DELTAS = np.array([-2, -1, 0, 1, 2], dtype=np.float32)
+_DISC_FIELDS = (cs.IDX["mesh_w"], cs.IDX["mesh_h"], cs.IDX["sc_x"], cs.IDX["sc_y"])
+
+
+def apply_action(cfg: np.ndarray, a_cont: np.ndarray, a_disc: np.ndarray
+                 ) -> np.ndarray:
+    """Apply one action to a design vector; returns the projected new vector.
+
+    a_cont: [30] in [-1,1];  a_disc: [4] integer category ids in [0,5).
+    """
+    import jax.numpy as jnp
+    new = np.array(cfg, dtype=np.float32, copy=True)
+    new[4:30] += np.asarray(a_cont[:26], np.float32) * CONT_SCALE
+    for j, f in enumerate(_DISC_FIELDS):
+        new[f] += DISC_DELTAS[int(a_disc[j])]
+    return np.asarray(cs.project(jnp.asarray(new)))
+
+
+def hetero_spreads(a_cont: np.ndarray) -> np.ndarray:
+    """Map action dims 26-29 from [-1,1] to spread factors in [0,1]."""
+    return (np.asarray(a_cont[26:30], np.float32) + 1.0) / 2.0
+
+
+def random_action(rng: np.random.Generator) -> Tuple[np.ndarray, np.ndarray]:
+    a_c = rng.uniform(-1.0, 1.0, size=N_CONT).astype(np.float32)
+    a_d = rng.integers(0, N_DISC_OPTIONS, size=N_DISC).astype(np.int32)
+    return a_c, a_d

@@ -1,0 +1,138 @@
+"""The hardware-design MDP environment (paper §3.1).
+
+One environment = (workload, process node, optimization mode).  Steps apply
+mixed discrete/continuous actions to the design vector, re-partition the
+operator graph when the mesh changes (or periodically), evaluate the
+analytic PPA model, and emit the Table-2 state + Eq.-34 reward.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import actions as act
+from repro.core import state as st
+from repro.core.partition import PartitionResult, partition
+from repro.core.reward import RewardModel
+from repro.ppa import config_space as cs
+from repro.ppa.analytic import M_IDX, evaluate_jit, node_vector
+from repro.ppa.nodes import node_params
+from repro.workload.features import Workload
+
+
+@dataclasses.dataclass
+class StepInfo:
+    metrics: np.ndarray
+    cfg: np.ndarray
+    reward_parts: Dict[str, float]
+    feasible: bool
+    partition_stats: np.ndarray
+
+
+class DSEEnv:
+    """Single-workload, single-node design-space exploration environment."""
+
+    def __init__(self, workload: Workload, node_nm: int, *,
+                 high_perf: bool = True, seed: int = 0,
+                 partition_period: int = 25,
+                 w_perf: Optional[float] = None,
+                 w_power: Optional[float] = None,
+                 w_area: Optional[float] = None):
+        self.workload = workload
+        self.node_nm = node_nm
+        self.high_perf = high_perf
+        self.node = node_params(node_nm, low_power=not high_perf)
+        self.node_vec = jnp.asarray(node_vector(self.node, high_perf=high_perf))
+        self.wl_vec = jnp.asarray(workload.features)
+        self.rng = np.random.default_rng(seed)
+        self.partition_period = partition_period
+        # PPA weight profiles (paper §5.4): high-perf (.4,.4,.2),
+        # low-power (.2,.6,.2)
+        if w_perf is None:
+            w_perf, w_power, w_area = ((0.4, 0.4, 0.2) if high_perf
+                                       else (0.2, 0.6, 0.2))
+        self.reward_model = RewardModel(
+            power_budget_mw=self.node.power_budget_mw,
+            area_budget_mm2=self.node.area_budget_mm2,
+            w_perf=w_perf, w_power=w_power, w_area=w_area)
+        self.cfg: np.ndarray = cs.default_config()
+        self._part: Optional[PartitionResult] = None
+        self._part_cache: Dict[tuple, PartitionResult] = {}
+        self._steps_since_partition = 10 ** 9
+        self._t = 0
+
+    # ------------------------------------------------------------------ api
+    def reset(self, jitter: float = 0.15) -> np.ndarray:
+        cfg = cs.default_config()
+        noise = self.rng.normal(0.0, jitter, cfg.shape).astype(np.float32)
+        cfg = cfg + noise * (cs.HI - cs.LO) * 0.1
+        self.cfg = np.asarray(cs.project(jnp.asarray(cfg)))
+        self._steps_since_partition = 10 ** 9
+        self._repartition()
+        metrics = self._evaluate(self.cfg)
+        self._t = 0
+        return self._encode(metrics)
+
+    def step(self, a_cont: np.ndarray, a_disc: np.ndarray
+             ) -> Tuple[np.ndarray, float, StepInfo]:
+        old_mesh = (self.cfg[cs.IDX["mesh_w"]], self.cfg[cs.IDX["mesh_h"]])
+        self.cfg = act.apply_action(self.cfg, a_cont, a_disc)
+        new_mesh = (self.cfg[cs.IDX["mesh_w"]], self.cfg[cs.IDX["mesh_h"]])
+        self._steps_since_partition += 1
+        if (new_mesh != old_mesh
+                or self._steps_since_partition >= self.partition_period):
+            self._repartition()
+        metrics = self._evaluate(self.cfg)
+        r, parts = self.reward_model(metrics)
+        s2 = self._encode(metrics)
+        self._t += 1
+        info = StepInfo(metrics=metrics, cfg=self.cfg.copy(),
+                        reward_parts=parts,
+                        feasible=bool(metrics[M_IDX["feasible"]] > 0.5),
+                        partition_stats=self._part_stats())
+        return s2, r, info
+
+    def evaluate_config(self, cfg: np.ndarray) -> np.ndarray:
+        """Evaluate an arbitrary design vector (search baselines)."""
+        return self._evaluate(np.asarray(cs.project(jnp.asarray(cfg))))
+
+    # -------------------------------------------------------------- internals
+    def _evaluate(self, cfg: np.ndarray) -> np.ndarray:
+        m = evaluate_jit(jnp.asarray(cfg, jnp.float32), self.wl_vec,
+                         self.node_vec)
+        return np.asarray(m)
+
+    def _repartition(self) -> None:
+        # cache keyed by the placement-relevant fields (mesh + ratios + lb
+        # weights, coarsely quantised); mesh deltas happen nearly every step
+        # and re-running the full placement would dominate episode cost.
+        key = (int(self.cfg[cs.IDX["mesh_w"]]), int(self.cfg[cs.IDX["mesh_h"]]),
+               round(float(self.cfg[cs.IDX["rho_matmul"]]), 1),
+               round(float(self.cfg[cs.IDX["rho_conv"]]), 1),
+               round(float(self.cfg[cs.IDX["rho_general"]]), 1),
+               round(float(self.cfg[cs.IDX["lb_alpha"]]), 1),
+               round(float(self.cfg[cs.IDX["lb_beta"]]), 1))
+        hit = self._part_cache.get(key)
+        if hit is None:
+            hit = partition(self.workload.graph, self.cfg)
+            if len(self._part_cache) > 512:
+                self._part_cache.pop(next(iter(self._part_cache)))
+            self._part_cache[key] = hit
+        self._part = hit
+        self._steps_since_partition = 0
+
+    def _part_stats(self) -> np.ndarray:
+        return (self._part.stats if self._part is not None
+                else np.zeros(8, np.float32))
+
+    def _encode(self, metrics: np.ndarray) -> np.ndarray:
+        s73 = st.encode(np.asarray(self.wl_vec), self.cfg, metrics,
+                        np.asarray(self.node_vec), self._part_stats())
+        return st.sac_state(s73)
+
+    @property
+    def partition_result(self) -> Optional[PartitionResult]:
+        return self._part

@@ -1,0 +1,138 @@
+"""Policy / critic / world-model networks (paper §3.4, §3.11, §3.15, §3.16).
+
+All pure-functional pytrees of jnp arrays.
+
+Actor (Fig. 2): s[52] -> 2x256 GELU trunk -> 80-dim output
+  (20 discrete logits = 4 mesh/SC deltas x 5 options, 30 means, 30 log-stds
+   clamped to [-20, 2]); tanh-squashed Gaussian with reparameterization.
+
+MoE gating (Eq. 54): K expert actors blended by a linear-softmax gate
+g_k(s).  We blend at the *output* level (mixture-of-means), which keeps the
+policy reparameterizable for SAC; the load-balance loss (Eq. 55) penalises
+gate collapse.  (Faithfulness note: Eq. 54 defines a true mixture density;
+the output blend is the standard reparameterizable relaxation.)
+
+Critics (Table 5): [s;a_cont] (82) -> 256 -> 256 -> 1, twin Q.
+World model (Eq. 69): [s;a] (82) -> 128 -> 64 -> delta-s (52), residual.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.actions import N_CONT, N_DISC, N_DISC_OPTIONS
+from repro.core.state import SAC_STATE_DIM
+
+HIDDEN = 256
+WM_HIDDEN = (128, 64)
+N_EXPERTS = 4
+LOG_STD_MIN, LOG_STD_MAX = -20.0, 2.0
+MOE_LB_COEF = 1e-2  # lambda_lb of Eq. 55
+
+
+def _dense(key, n_in, n_out, scale=None):
+    w_key, _ = jax.random.split(key)
+    scale = scale if scale is not None else jnp.sqrt(2.0 / n_in)
+    return dict(w=jax.random.normal(w_key, (n_in, n_out)) * scale,
+                b=jnp.zeros((n_out,)))
+
+
+# ----------------------------------------------------------------- actor --
+def actor_init(key: jax.Array, state_dim: int = SAC_STATE_DIM,
+               n_experts: int = N_EXPERTS) -> Dict:
+    keys = jax.random.split(key, 6)
+    p = dict(
+        l1=jax.vmap(lambda k: _dense(k, state_dim, HIDDEN))(
+            jax.random.split(keys[0], n_experts)),
+        l2=jax.vmap(lambda k: _dense(k, HIDDEN, HIDDEN))(
+            jax.random.split(keys[1], n_experts)),
+        disc=jax.vmap(lambda k: _dense(k, HIDDEN, N_DISC * N_DISC_OPTIONS, 1e-2))(
+            jax.random.split(keys[2], n_experts)),
+        mu=jax.vmap(lambda k: _dense(k, HIDDEN, N_CONT, 1e-2))(
+            jax.random.split(keys[3], n_experts)),
+        log_std=jax.vmap(lambda k: _dense(k, HIDDEN, N_CONT, 1e-2))(
+            jax.random.split(keys[4], n_experts)),
+        gate=jax.random.normal(keys[5], (state_dim, n_experts)) * 0.01,
+    )
+    return p
+
+
+def actor_forward(params: Dict, s: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """s: [B, 52] -> (disc_logits [B,4,5], mu [B,30], log_std [B,30],
+    gate probs [B,K])."""
+    g = jax.nn.softmax(s @ params["gate"], axis=-1)                    # Eq. 54
+    # expert trunks: [B,K,H]
+    h1 = jax.nn.gelu(jnp.einsum("bs,kso->bko", s, params["l1"]["w"])
+                     + params["l1"]["b"])                               # Eq. 1
+    h2 = jax.nn.gelu(jnp.einsum("bkh,kho->bko", h1, params["l2"]["w"])
+                     + params["l2"]["b"])                               # Eq. 2
+    def head(name):
+        out = (jnp.einsum("bkh,kho->bko", h2, params[name]["w"])
+               + params[name]["b"])
+        return jnp.einsum("bk,bko->bo", g, out)
+    disc = head("disc").reshape(s.shape[0], N_DISC, N_DISC_OPTIONS)     # Eq. 3
+    mu = jnp.tanh(head("mu"))                                           # Eq. 4
+    log_std = jnp.clip(head("log_std"), LOG_STD_MIN, LOG_STD_MAX)       # Eq. 5
+    return disc, mu, log_std, g
+
+
+def sample_actions(params: Dict, s: jnp.ndarray, key: jax.Array):
+    """Reparameterised tanh-Gaussian (cont) + categorical (disc) sampling.
+
+    Returns (a_cont [B,30], a_disc [B,4] int, logp_cont [B], logp_disc [B],
+    gate [B,K], disc_logits [B,4,5]).
+    """
+    kc, kd = jax.random.split(key)
+    disc_logits, mu, log_std, gate = actor_forward(params, s)
+    std = jnp.exp(log_std)
+    eps = jax.random.normal(kc, mu.shape)
+    a = jnp.tanh(mu + std * eps)   # paper: a = tanh(mu + sigma*eps)
+    # tanh-squashed Gaussian log-prob with change-of-variables correction
+    base_logp = (-0.5 * (eps ** 2) - log_std
+                 - 0.5 * jnp.log(2 * jnp.pi)).sum(-1)
+    logp_c = base_logp - jnp.log(1 - a ** 2 + 1e-6).sum(-1)
+    a_d = jax.random.categorical(kd, disc_logits, axis=-1)              # Eq. 6-7
+    logp_d = jnp.take_along_axis(
+        jax.nn.log_softmax(disc_logits, -1), a_d[..., None], -1
+    ).squeeze(-1).sum(-1)
+    return a, a_d, logp_c, logp_d, gate, disc_logits
+
+
+def moe_balance_loss(gate: jnp.ndarray, n_experts: int = N_EXPERTS) -> jnp.ndarray:
+    """Eq. 55: lambda_lb * K * sum_k mean_b(g_k)^2."""
+    gbar = gate.mean(axis=0)
+    return MOE_LB_COEF * n_experts * jnp.sum(gbar ** 2)
+
+
+# ---------------------------------------------------------------- critics --
+def critic_init(key: jax.Array, state_dim: int = SAC_STATE_DIM) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return dict(l1=_dense(k1, state_dim + N_CONT, HIDDEN),
+                l2=_dense(k2, HIDDEN, HIDDEN),
+                out=_dense(k3, HIDDEN, 1, 1e-2))
+
+
+def critic_forward(params: Dict, s: jnp.ndarray, a_cont: jnp.ndarray) -> jnp.ndarray:
+    x = jnp.concatenate([s, a_cont], axis=-1)
+    h = jax.nn.gelu(x @ params["l1"]["w"] + params["l1"]["b"])
+    h = jax.nn.gelu(h @ params["l2"]["w"] + params["l2"]["b"])
+    return (h @ params["out"]["w"] + params["out"]["b"]).squeeze(-1)
+
+
+# ------------------------------------------------------------ world model --
+def world_model_init(key: jax.Array, state_dim: int = SAC_STATE_DIM) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return dict(l1=_dense(k1, state_dim + N_CONT, WM_HIDDEN[0]),
+                l2=_dense(k2, WM_HIDDEN[0], WM_HIDDEN[1]),
+                out=_dense(k3, WM_HIDDEN[1], state_dim, 1e-2))
+
+
+def world_model_forward(params: Dict, s: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """Predict next state via residual delta (Eq. 69): s' = s + f([s;a])."""
+    x = jnp.concatenate([s, a], axis=-1)
+    h = jax.nn.gelu(x @ params["l1"]["w"] + params["l1"]["b"])
+    h = jax.nn.gelu(h @ params["l2"]["w"] + params["l2"]["b"])
+    return s + (h @ params["out"]["w"] + params["out"]["b"])

@@ -1,0 +1,88 @@
+"""Pareto archive + scalarized final selection (paper §3.10, §5.4).
+
+Objectives: (power [min], -perf [min], area [min]).  Every feasible
+configuration is inserted; the archive maintains the non-dominated frontier.
+After convergence the final design is selected by scalarizing frontier-
+normalized objectives with the user PPA weights — guaranteeing the returned
+configuration is Pareto-optimal among everything explored.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ArchiveEntry:
+    cfg: np.ndarray
+    power_mw: float
+    perf_gops: float
+    area_mm2: float
+    tok_s: float
+    ppa_score: float
+    episode: int
+
+    def objectives(self) -> np.ndarray:
+        return np.array([self.power_mw, -self.perf_gops, self.area_mm2])
+
+
+def _dominates(a: np.ndarray, b: np.ndarray) -> bool:
+    return bool(np.all(a <= b) and np.any(a < b))
+
+
+class ParetoArchive:
+    def __init__(self, max_size: int = 2048):
+        self.entries: List[ArchiveEntry] = []
+        self.max_size = max_size
+        self.n_inserted = 0
+
+    def insert(self, entry: ArchiveEntry) -> bool:
+        """Insert if non-dominated; evict newly-dominated entries."""
+        self.n_inserted += 1
+        obj = entry.objectives()
+        keep = []
+        for e in self.entries:
+            eo = e.objectives()
+            if _dominates(eo, obj):
+                return False          # dominated by an existing entry
+            if not _dominates(obj, eo):
+                keep.append(e)
+        keep.append(entry)
+        if len(keep) > self.max_size:  # crowd-prune: drop densest
+            objs = np.stack([e.objectives() for e in keep])
+            span = objs.max(0) - objs.min(0) + 1e-9
+            normed = (objs - objs.min(0)) / span
+            d = np.linalg.norm(normed[:, None] - normed[None, :], axis=-1)
+            np.fill_diagonal(d, np.inf)
+            keep.pop(int(np.argmin(d.min(1))))
+        self.entries = keep
+        return True
+
+    def select(self, w_perf: float = 0.4, w_power: float = 0.4,
+               w_area: float = 0.2) -> Optional[ArchiveEntry]:
+        """Scalarized selection on frontier-normalized objectives."""
+        if not self.entries:
+            return None
+        perf = np.array([e.perf_gops for e in self.entries])
+        power = np.array([e.power_mw for e in self.entries])
+        area = np.array([e.area_mm2 for e in self.entries])
+
+        def norm(x):
+            return (x - x.min()) / max(x.max() - x.min(), 1e-9)
+
+        score = (w_perf * (1.0 - norm(perf)) + w_power * norm(power)
+                 + w_area * norm(area))
+        return self.entries[int(np.argmin(score))]
+
+    def frontier(self) -> Dict[str, np.ndarray]:
+        return dict(
+            power_mw=np.array([e.power_mw for e in self.entries]),
+            perf_gops=np.array([e.perf_gops for e in self.entries]),
+            area_mm2=np.array([e.area_mm2 for e in self.entries]),
+            tok_s=np.array([e.tok_s for e in self.entries]),
+        )
+
+    def __len__(self) -> int:
+        return len(self.entries)

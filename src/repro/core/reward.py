@@ -1,0 +1,87 @@
+"""Reward function (paper §3.10, Eqs. 34-44, Table 4).
+
+R(s,a) = alpha*P_norm - beta*P_power - gamma*A_norm + B_feasible
+         - P_violation - P_memory - P_hazard
+
+Normalization ranges are ADAPTIVE (Eq. 35-37): running min/max over the
+metrics observed this run, seeded from the node budgets so early episodes
+are well-scaled ("normalization ranges are derived from process node
+characteristics and constraints").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.ppa.analytic import M_IDX
+
+S_MAG = 1.0          # score magnitude (Table 4: feasibility bonus in [0,2])
+LAMBDA_MEM = 2e-3    # per-MB memory overuse penalty (Eq. 40)
+LAMBDA_HAZARD = 0.1  # Eq. 41
+
+
+def adaptive_weights(w_perf: float, w_power: float, w_area: float
+                     ) -> Tuple[float, float, float]:
+    """Eqs. 42-44."""
+    tot = w_perf + w_power + w_area
+    return w_perf / tot, w_power / tot, w_area / tot
+
+
+@dataclasses.dataclass
+class RunningRange:
+    lo: float
+    hi: float
+
+    def update(self, x: float) -> None:
+        self.lo = min(self.lo, x)
+        self.hi = max(self.hi, x)
+
+    def norm(self, x: float) -> float:
+        return (x - self.lo) / max(self.hi - self.lo, 1e-9)
+
+
+@dataclasses.dataclass
+class RewardModel:
+    """Stateful reward with adaptive normalisation ranges."""
+    power_budget_mw: float
+    area_budget_mm2: float
+    w_perf: float = 0.4
+    w_power: float = 0.4
+    w_area: float = 0.2
+
+    def __post_init__(self) -> None:
+        self.alpha, self.beta, self.gamma = adaptive_weights(
+            self.w_perf, self.w_power, self.w_area)
+        # seed ranges from node budgets (paper §3.10 note)
+        self.perf_rng = RunningRange(0.0, 1.0)
+        self.power_rng = RunningRange(0.0, self.power_budget_mw)
+        self.area_rng = RunningRange(0.0, self.area_budget_mm2)
+
+    def __call__(self, metrics: np.ndarray) -> Tuple[float, Dict[str, float]]:
+        m = lambda n: float(metrics[M_IDX[n]])
+        perf, power, area = m("perf_gops"), m("power_mw"), m("area_mm2")
+        self.perf_rng.update(perf)
+        self.power_rng.update(power)
+        self.area_rng.update(area)
+
+        p_norm = self.perf_rng.norm(perf)                           # Eq. 35
+        p_power = self.power_rng.norm(power)                        # Eq. 36
+        a_norm = self.area_rng.norm(area)                           # Eq. 37
+
+        feasible = m("feasible") > 0.5
+        m_pwr = (self.power_budget_mw - power) / self.power_budget_mw
+        b_feas = S_MAG * (1.0 + max(m_pwr, 0.0)) if feasible else 0.0  # Eq. 38
+
+        v = max(0.0, (power - self.power_budget_mw) / self.power_budget_mw)
+        p_viol = S_MAG * (1.0 + v) * v ** 2                          # Eq. 39
+        p_mem = LAMBDA_MEM * max(0.0, m("mem_overuse_mb"))           # Eq. 40
+        p_haz = LAMBDA_HAZARD * m("hazard")                          # Eq. 41
+
+        r = (self.alpha * p_norm - self.beta * p_power - self.gamma * a_norm
+             + b_feas - p_viol - p_mem - p_haz)                      # Eq. 34
+        r = float(np.clip(r, -5.0, 3.0))   # Table 4 typical range
+        return r, dict(p_norm=p_norm, p_power=p_power, a_norm=a_norm,
+                       b_feas=b_feas, p_viol=p_viol, p_mem=p_mem,
+                       p_haz=p_haz, reward=r)

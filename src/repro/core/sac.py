@@ -1,0 +1,169 @@
+"""Soft Actor-Critic with twin Q, entropy auto-tuning and PER weighting
+(paper §3.11, Table 5/6 hyperparameters), fully jit-compiled.
+
+Hybrid action handling (paper §3.4.1 + Table 5 critic shape [82->...]):
+the critics see only the continuous action (82 = 52 + 30); the 4 discrete
+mesh/SC heads are trained with a policy-gradient on the TD advantage
+(paper §3.15 Eq. 52-53 reduces to this with the SAC critic as baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import networks as nets
+from repro.core.actions import N_CONT
+from repro.optim.adam import AdamState, adam_init, adam_update
+
+LR = 3e-4                 # actor / critic / alpha (Table 6)
+GAMMA = 0.99
+TAU = 0.005
+TARGET_ENTROPY = -float(N_CONT)   # -30 (Table 6)
+INIT_ALPHA = 0.2
+BATCH_SIZE = 256
+WARMUP_STEPS = 1000
+
+
+class SACParams(NamedTuple):
+    actor: Dict
+    q1: Dict
+    q2: Dict
+    q1_targ: Dict
+    q2_targ: Dict
+    log_alpha: jnp.ndarray
+
+
+class SACOpt(NamedTuple):
+    actor: AdamState
+    q1: AdamState
+    q2: AdamState
+    alpha: AdamState
+
+
+class SACState(NamedTuple):
+    params: SACParams
+    opt: SACOpt
+    step: jnp.ndarray
+
+
+class Batch(NamedTuple):
+    s: jnp.ndarray        # [B, 52]
+    a_cont: jnp.ndarray   # [B, 30]
+    a_disc: jnp.ndarray   # [B, 4] int32
+    r: jnp.ndarray        # [B]
+    s2: jnp.ndarray       # [B, 52]
+    done: jnp.ndarray     # [B]
+    is_w: jnp.ndarray     # [B] PER importance weights
+
+
+def create(seed: int = 0) -> SACState:
+    k = jax.random.PRNGKey(seed)
+    ka, k1, k2 = jax.random.split(k, 3)
+    actor = nets.actor_init(ka)
+    q1 = nets.critic_init(k1)
+    q2 = nets.critic_init(k2)
+    params = SACParams(actor=actor, q1=q1, q2=q2,
+                       q1_targ=jax.tree.map(jnp.copy, q1),
+                       q2_targ=jax.tree.map(jnp.copy, q2),
+                       log_alpha=jnp.log(jnp.asarray(INIT_ALPHA)))
+    opt = SACOpt(actor=adam_init(actor), q1=adam_init(q1), q2=adam_init(q2),
+                 alpha=adam_init(params.log_alpha))
+    return SACState(params=params, opt=opt, step=jnp.zeros((), jnp.int32))
+
+
+@jax.jit
+def update(state: SACState, batch: Batch, key: jax.Array
+           ) -> Tuple[SACState, jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One SAC step.  Returns (new_state, |td_error| for PER, metrics)."""
+    p = state.params
+    k1, k2 = jax.random.split(key)
+    alpha = jnp.exp(p.log_alpha)
+
+    # ---- critic targets (Eq. 46/59): clipped double-Q with entropy term --
+    a2, a2_d, logp2_c, logp2_d, _, _ = nets.sample_actions(p.actor, batch.s2, k1)
+    q_next = jnp.minimum(nets.critic_forward(p.q1_targ, batch.s2, a2),
+                         nets.critic_forward(p.q2_targ, batch.s2, a2))
+    y = batch.r + GAMMA * (1.0 - batch.done) * (q_next - alpha * logp2_c)
+    y = jax.lax.stop_gradient(y)
+
+    def critic_loss(q_params):
+        q = nets.critic_forward(q_params, batch.s, batch.a_cont)
+        td = q - y
+        return jnp.mean(batch.is_w * td ** 2), td
+
+    (l_q1, td1), g1 = jax.value_and_grad(critic_loss, has_aux=True)(p.q1)
+    (l_q2, td2), g2 = jax.value_and_grad(critic_loss, has_aux=True)(p.q2)
+    q1_new, opt_q1 = adam_update(p.q1, g1, state.opt.q1, lr=LR, grad_clip=10.0)
+    q2_new, opt_q2 = adam_update(p.q2, g2, state.opt.q2, lr=LR, grad_clip=10.0)
+
+    # ---- actor (Eq. 58) + discrete-head policy gradient + MoE balance ----
+    def actor_loss(actor_params):
+        a, a_d, logp_c, logp_d, gate, disc_logits = nets.sample_actions(
+            actor_params, batch.s, k2)
+        q_pi = jnp.minimum(nets.critic_forward(q1_new, batch.s, a),
+                           nets.critic_forward(q2_new, batch.s, a))
+        loss_cont = jnp.mean(alpha * logp_c - q_pi)
+        # discrete: REINFORCE on stored actions with TD advantage (§3.15)
+        logp_stored = jnp.take_along_axis(
+            jax.nn.log_softmax(disc_logits, -1),
+            batch.a_disc[..., None], -1).squeeze(-1).sum(-1)
+        v_s = jax.lax.stop_gradient(q_pi - alpha * logp_c)
+        adv = jax.lax.stop_gradient(batch.r + GAMMA * (1 - batch.done)
+                                    * (q_next - alpha * logp2_c) - v_s)
+        loss_disc = -jnp.mean(batch.is_w * logp_stored * adv)
+        disc_entropy = -jnp.mean(jnp.sum(
+            jax.nn.softmax(disc_logits, -1)
+            * jax.nn.log_softmax(disc_logits, -1), axis=(-2, -1)))
+        lb = nets.moe_balance_loss(gate)
+        return (loss_cont + 0.5 * loss_disc - 1e-3 * disc_entropy + lb,
+                (logp_c, lb))
+
+    (l_actor, (logp_c, l_lb)), ga = jax.value_and_grad(
+        actor_loss, has_aux=True)(p.actor)
+    actor_new, opt_a = adam_update(p.actor, ga, state.opt.actor, lr=LR,
+                                   grad_clip=10.0)
+
+    # ---- entropy temperature (Eq. 45/60), log-alpha bounded [-10, 10] ----
+    def alpha_loss(log_alpha):
+        return -jnp.mean(jnp.exp(log_alpha)
+                         * jax.lax.stop_gradient(logp_c + TARGET_ENTROPY))
+
+    l_al, g_al = jax.value_and_grad(alpha_loss)(p.log_alpha)
+    g_al = jnp.clip(g_al, -1.0, 1.0)
+    log_alpha_new, opt_al = adam_update(p.log_alpha, g_al, state.opt.alpha, lr=LR)
+    log_alpha_new = jnp.clip(log_alpha_new, -10.0, 10.0)
+
+    # ---- polyak target update (tau = 0.005) -------------------------------
+    def polyak(t, s):
+        return jax.tree.map(lambda a, b: (1 - TAU) * a + TAU * b, t, s)
+
+    new_params = SACParams(actor=actor_new, q1=q1_new, q2=q2_new,
+                           q1_targ=polyak(p.q1_targ, q1_new),
+                           q2_targ=polyak(p.q2_targ, q2_new),
+                           log_alpha=log_alpha_new)
+    new_state = SACState(params=new_params,
+                         opt=SACOpt(actor=opt_a, q1=opt_q1, q2=opt_q2,
+                                    alpha=opt_al),
+                         step=state.step + 1)
+    td_abs = 0.5 * (jnp.abs(td1) + jnp.abs(td2))
+    metrics = dict(loss_q1=l_q1, loss_q2=l_q2, loss_actor=l_actor,
+                   loss_alpha=l_al, alpha=jnp.exp(log_alpha_new),
+                   entropy=-jnp.mean(logp_c), moe_lb=l_lb)
+    return new_state, td_abs, metrics
+
+
+@jax.jit
+def policy_act(actor_params: Dict, s: jnp.ndarray, key: jax.Array):
+    """Sample one action for environment interaction."""
+    a, a_d, _, _, _, _ = nets.sample_actions(actor_params, s[None], key)
+    return a[0], a_d[0]
+
+
+@jax.jit
+def policy_mean(actor_params: Dict, s: jnp.ndarray):
+    """Deterministic (mean) action — used by MPC candidate generation."""
+    disc_logits, mu, _, _ = nets.actor_forward(actor_params, s[None])
+    return mu[0], jnp.argmax(disc_logits[0], axis=-1)

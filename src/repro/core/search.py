@@ -1,0 +1,294 @@
+"""Algorithm 1: Unified RL-based hardware-aware compilation loop.
+
+Per process node: epsilon-greedy SAC with PER, online world-model training,
+MPC refinement during exploitation (eps < 0.15), Pareto archiving of every
+feasible configuration, and post-convergence scalarized selection.  Also
+implements the random-search and grid-search baselines of Table 21.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import actions as act
+from repro.core import mpc as mpc_mod
+from repro.core import sac as sac_mod
+from repro.core import world_model as wm_mod
+from repro.core.env import DSEEnv
+from repro.core.exploration import EpsilonSchedule
+from repro.core.hetero import HeteroConfig, derive
+from repro.core.pareto import ArchiveEntry, ParetoArchive
+from repro.core.replay import PERBuffer
+from repro.core.state import SAC_STATE_DIM
+from repro.ppa import config_space as cs
+from repro.ppa import surrogate as sur_mod
+from repro.ppa.analytic import M_IDX
+from repro.workload.features import Workload
+
+
+@dataclasses.dataclass
+class SearchConfig:
+    episodes: int = 4613          # paper Table 14 per-node budget
+    warmup: int = 1000            # SAC warmup (Table 6)
+    batch_size: int = 256
+    eps0: float = 0.5
+    eps_min: float = 0.1
+    mpc_eps_gate: float = 0.15    # MPC active when eps < 0.15 (§3.16)
+    reset_period: int = 500
+    seed: int = 0
+    early_stop_patience: int = 1500   # "Bayesian early stopping" proxy
+    update_every: int = 1
+    wm_batch: int = 256
+    surrogate_every: int = 8
+    verbose: bool = False
+
+
+@dataclasses.dataclass
+class TracePoint:
+    episode: int
+    reward: float
+    best_score: float
+    eps: float
+    entropy: float
+    unique_configs: int
+    feasible_count: int
+    tok_s: float
+
+
+@dataclasses.dataclass
+class SearchResult:
+    method: str
+    node_nm: int
+    best_cfg: Optional[np.ndarray]
+    best_metrics: Optional[np.ndarray]
+    best_score: float
+    archive: ParetoArchive
+    trace: List[TracePoint]
+    hetero: Optional[HeteroConfig]
+    episodes_run: int
+    feasible_count: int
+    unique_configs: int
+    wall_s: float
+
+    def metric(self, name: str) -> float:
+        if self.best_metrics is None:
+            return float("nan")
+        return float(self.best_metrics[M_IDX[name]])
+
+
+def _cfg_key(cfg: np.ndarray) -> tuple:
+    return tuple(np.round(np.asarray(cfg, np.float64), 3).tolist())
+
+
+def _update_best(best, metrics, cfg, archive, episode):
+    """paper line 15: if PPA < s* and feasible -> keep."""
+    score = float(metrics[M_IDX["ppa_score"]])
+    feas = metrics[M_IDX["feasible"]] > 0.5
+    if feas:
+        archive.insert(ArchiveEntry(
+            cfg=cfg.copy(), power_mw=float(metrics[M_IDX["power_mw"]]),
+            perf_gops=float(metrics[M_IDX["perf_gops"]]),
+            area_mm2=float(metrics[M_IDX["area_mm2"]]),
+            tok_s=float(metrics[M_IDX["tok_s"]]),
+            ppa_score=score, episode=episode))
+        if score < best[0]:
+            return (score, cfg.copy(), metrics.copy()), True
+    return best, feas
+
+
+def run_sac(workload: Workload, node_nm: int, *, high_perf: bool = True,
+            search: Optional[SearchConfig] = None) -> SearchResult:
+    """The paper's production flow: SAC + MoE + PER + world model + MPC."""
+    sc = search or SearchConfig()
+    t0 = time.time()
+    env = DSEEnv(workload, node_nm, high_perf=high_perf, seed=sc.seed)
+    rng = np.random.default_rng(sc.seed)
+    key = jax.random.PRNGKey(sc.seed)
+
+    sac_state = sac_mod.create(sc.seed)
+    wm_state = wm_mod.create(sc.seed + 1)
+    surrogate = sur_mod.Surrogate.create(SAC_STATE_DIM + act.N_CONT,
+                                         seed=sc.seed + 2)
+    buf = PERBuffer(SAC_STATE_DIM, act.N_CONT, act.N_DISC, seed=sc.seed)
+    eps_sched = EpsilonSchedule(sc.eps0, sc.eps_min, sc.episodes)
+    archive = ParetoArchive()
+    trace: List[TracePoint] = []
+    seen: set = set()
+    best = (np.inf, None, None)
+    feasible_count = 0
+    last_entropy = 0.0
+    no_improve = 0
+
+    sur_x: List[np.ndarray] = []
+    sur_y: List[np.ndarray] = []
+
+    s = env.reset()
+    for t in range(sc.episodes):
+        key, k_act, k_upd, k_mpc = jax.random.split(key, 4)
+        # ---- action selection: eps-greedy over SAC policy (Alg. 1 l.6) ----
+        if rng.random() < eps_sched.eps:
+            a_c, a_d = act.random_action(rng)
+        else:
+            a_c, a_d = sac_mod.policy_act(sac_state.params.actor,
+                                          jnp.asarray(s), k_act)
+            a_c, a_d = np.asarray(a_c), np.asarray(a_d)
+            # MPC refinement during exploitation (Alg. 1 l.14)
+            if (eps_sched.eps < sc.mpc_eps_gate and surrogate.accepted
+                    and wm_mod.trained(wm_state)):
+                a_mpc = mpc_mod.plan(sac_state.params.actor, wm_state.params,
+                                     surrogate.params, jnp.asarray(s), k_mpc)
+                a_c = np.asarray(mpc_mod.refine(jnp.asarray(a_c), a_mpc))
+        # ---- env transition (Alg. 1 l.7-10) -------------------------------
+        s2, r, info = env.step(a_c, a_d)
+        buf.add(s, a_c, a_d, r, s2, 0.0)
+        sur_x.append(np.concatenate([s, a_c]).astype(np.float32))
+        sur_y.append(info.metrics.astype(np.float32))
+        prev_best_score = best[0]
+        best, feas = _update_best(best, info.metrics, info.cfg, archive, t)
+        feasible_count += int(feas)
+        seen.add(_cfg_key(info.cfg))
+        no_improve = 0 if best[0] < prev_best_score else no_improve + 1
+        # ---- learn (Alg. 1 l.12-13) ---------------------------------------
+        if buf.size >= max(sc.batch_size, min(sc.warmup, sc.episodes // 4)) \
+                and t % sc.update_every == 0:
+            batch_np, idx = buf.sample(sc.batch_size)
+            batch = sac_mod.Batch(**{k: jnp.asarray(v)
+                                     for k, v in batch_np.items()})
+            sac_state, td_abs, met = sac_mod.update(sac_state, batch, k_upd)
+            buf.update_priorities(idx, np.asarray(td_abs))
+            last_entropy = float(met["entropy"])
+            wmb = buf.recent(sc.wm_batch)
+            wm_state, _ = wm_mod.train_step(
+                wm_state, jnp.asarray(wmb["s"]), jnp.asarray(wmb["a_cont"]),
+                jnp.asarray(wmb["s2"]))
+            if t % sc.surrogate_every == 0 and len(sur_x) >= 64:
+                pick = rng.integers(0, len(sur_x), size=min(256, len(sur_x)))
+                surrogate.update(np.stack([sur_x[i] for i in pick]),
+                                 np.stack([sur_y[i] for i in pick]))
+                if len(sur_x) > 20_000:   # bound host memory
+                    sur_x = sur_x[-10_000:]
+                    sur_y = sur_y[-10_000:]
+        # ---- epsilon decay (Eq. 9) ----------------------------------------
+        eps_sched.step(found_feasible=feasible_count > 0)
+        if t % 50 == 0 or t == sc.episodes - 1:
+            trace.append(TracePoint(
+                episode=t, reward=r, best_score=float(best[0]),
+                eps=eps_sched.eps, entropy=last_entropy,
+                unique_configs=len(seen), feasible_count=feasible_count,
+                tok_s=float(info.metrics[M_IDX["tok_s"]])))
+            if sc.verbose:
+                print(f"  ep {t:5d} r={r:+.3f} best={best[0]:.4f} "
+                      f"eps={eps_sched.eps:.3f} feas={feasible_count}")
+        if t % sc.reset_period == sc.reset_period - 1:
+            s = env.reset()
+        else:
+            s = s2
+        if (no_improve > sc.early_stop_patience
+                and eps_sched.eps <= sc.eps_min + 1e-6):
+            break
+
+    # ---- final selection: Pareto-scalarized (paper §3.10) ----------------
+    sel = archive.select(env.reward_model.w_perf, env.reward_model.w_power,
+                         env.reward_model.w_area)
+    best_cfg = sel.cfg if sel is not None else best[1]
+    best_metrics = (env.evaluate_config(best_cfg)
+                    if best_cfg is not None else None)
+    hetero = None
+    if best_cfg is not None:
+        env.cfg = best_cfg.copy()
+        env._repartition()
+        hetero = derive(best_cfg, env.partition_result,
+                        weight_bytes_total=workload.f("weight_mb") * 1e6)
+    return SearchResult(
+        method="sac", node_nm=node_nm, best_cfg=best_cfg,
+        best_metrics=best_metrics,
+        best_score=(float(best_metrics[M_IDX["ppa_score"]])
+                    if best_metrics is not None else float("inf")),
+        archive=archive, trace=trace, hetero=hetero, episodes_run=t + 1,
+        feasible_count=feasible_count, unique_configs=len(seen),
+        wall_s=time.time() - t0)
+
+
+# --------------------------------------------------------------------------
+def run_random(workload: Workload, node_nm: int, *, high_perf: bool = True,
+               episodes: int = 4613, seed: int = 0) -> SearchResult:
+    """Random-search baseline (Table 21)."""
+    t0 = time.time()
+    env = DSEEnv(workload, node_nm, high_perf=high_perf, seed=seed)
+    rng = np.random.default_rng(seed)
+    archive = ParetoArchive()
+    best = (np.inf, None, None)
+    feas_count = 0
+    seen = set()
+    trace = []
+    for t in range(episodes):
+        cfg = cs.random_config(rng)
+        m = env.evaluate_config(cfg)
+        best, feas = _update_best(best, m, cfg, archive, t)
+        feas_count += int(feas)
+        seen.add(_cfg_key(cfg))
+        if t % 50 == 0:
+            trace.append(TracePoint(t, 0.0, float(best[0]), 1.0, 0.0,
+                                    len(seen), feas_count,
+                                    float(m[M_IDX["tok_s"]])))
+    return SearchResult("random", node_nm, best[1], best[2], float(best[0]),
+                        archive, trace, None, episodes, feas_count,
+                        len(seen), time.time() - t0)
+
+
+def run_grid(workload: Workload, node_nm: int, *, high_perf: bool = True,
+             episodes: int = 4613, seed: int = 0) -> SearchResult:
+    """Grid-search baseline (Table 21): lattice over the dominant axes."""
+    t0 = time.time()
+    env = DSEEnv(workload, node_nm, high_perf=high_perf, seed=seed)
+    archive = ParetoArchive()
+    best = (np.inf, None, None)
+    feas_count = 0
+    seen = set()
+    trace = []
+    # lattice sized to the episode budget
+    meshes = np.unique(np.linspace(2, 64, 14).astype(int))
+    vlens = np.array([256, 512, 1024, 1536, 2048])
+    wmems = np.array([1024, 4096, 9800, 16384, 32768, 65536])
+    freqs = np.array([0.25, 0.5, 1.0])
+    t = 0
+    for mw in meshes:
+        for vl in vlens:
+            for wm in wmems:
+                for fq in freqs:
+                    if t >= episodes:
+                        break
+                    cfg = cs.default_config()
+                    cfg[cs.IDX["mesh_w"]] = mw
+                    cfg[cs.IDX["mesh_h"]] = mw
+                    cfg[cs.IDX["vlen"]] = vl
+                    cfg[cs.IDX["wmem_kb"]] = wm
+                    cfg[cs.IDX["freq_frac"]] = fq
+                    m = env.evaluate_config(cfg)
+                    best, feas = _update_best(best, m, cfg, archive, t)
+                    feas_count += int(feas)
+                    seen.add(_cfg_key(cfg))
+                    if t % 50 == 0:
+                        trace.append(TracePoint(
+                            t, 0.0, float(best[0]), 0.0, 0.0, len(seen),
+                            feas_count, float(m[M_IDX["tok_s"]])))
+                    t += 1
+    return SearchResult("grid", node_nm, best[1], best[2], float(best[0]),
+                        archive, trace, None, t, feas_count, len(seen),
+                        time.time() - t0)
+
+
+def run_all_nodes(workload: Workload, nodes: Sequence[int], *,
+                  high_perf: bool = True,
+                  search: Optional[SearchConfig] = None
+                  ) -> Dict[int, SearchResult]:
+    """Algorithm 1 outer loop: sequential per-node optimisation (Eq. 50)."""
+    out = {}
+    for n in nodes:
+        out[n] = run_sac(workload, n, high_perf=high_perf, search=search)
+    return out

@@ -1,0 +1,54 @@
+"""World model f_omega: residual next-state prediction (paper §3.16, Eq. 69).
+
+2-layer MLP [82 -> 128 -> 64 -> 52] trained online from SAC replay
+transitions with MSE on delta-s at HALF the critic learning rate.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import networks as nets
+from repro.optim.adam import AdamState, adam_init, adam_update
+
+WM_LR = 1.5e-4   # half the critic LR (paper §3.16)
+
+
+class WMState(NamedTuple):
+    params: Dict
+    opt: AdamState
+    n_updates: jnp.ndarray
+    ema_loss: jnp.ndarray
+
+
+def create(seed: int = 0) -> WMState:
+    params = nets.world_model_init(jax.random.PRNGKey(seed))
+    return WMState(params=params, opt=adam_init(params),
+                   n_updates=jnp.zeros((), jnp.int32),
+                   ema_loss=jnp.asarray(jnp.inf))
+
+
+@jax.jit
+def train_step(state: WMState, s: jnp.ndarray, a: jnp.ndarray,
+               s2: jnp.ndarray) -> Tuple[WMState, jnp.ndarray]:
+    """MSE on residual delta-s (Eq. 69)."""
+    def loss_fn(params):
+        pred = nets.world_model_forward(params, s, a)
+        return jnp.mean((pred - s2) ** 2)
+
+    loss, grads = jax.value_and_grad(loss_fn)(state.params)
+    params, opt = adam_update(state.params, grads, state.opt, lr=WM_LR,
+                              grad_clip=10.0)
+    ema = jnp.where(jnp.isinf(state.ema_loss), loss,
+                    0.95 * state.ema_loss + 0.05 * loss)
+    return WMState(params=params, opt=opt, n_updates=state.n_updates + 1,
+                   ema_loss=ema), loss
+
+
+def trained(state: WMState, min_updates: int = 50, max_loss: float = 0.05
+            ) -> bool:
+    """Is the model good enough to drive MPC? (activation gate, §3.16)."""
+    return (int(state.n_updates) >= min_updates
+            and float(state.ema_loss) < max_loss)

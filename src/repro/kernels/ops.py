@@ -1,0 +1,46 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode; on
+TPU backends they lower natively.  The model zoo calls these behind
+``use_pallas`` flags — the default model path is the pure-jnp reference
+(repro.models.attention / repro.kernels.ref), which is what the dry-run
+lowers (Pallas TPU kernels cannot lower on the CPU dry-run host).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.policy_mlp import fused_mlp_pallas
+from repro.kernels.ssm_scan import ssm_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    """q: [B,H,Sq,hd]; k/v: [B,Hk,Sk,hd] -> [B,H,Sq,hd]."""
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "chunk"))
+def ssm_scan(dt, b_in, c_in, x, a, *, block_d: int = 512, chunk: int = 128):
+    """Selective scan: dt/x [B,S,D], b/c [B,S,N], a [D,N] -> y [B,S,D]."""
+    return ssm_scan_pallas(dt, b_in, c_in, x, a, block_d=block_d,
+                           chunk=chunk, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def fused_mlp(x, w1, b1, w2, b2, w3, b3, *, block_b: int = 256):
+    """Fused 3-layer GELU MLP with VMEM-resident weights."""
+    return fused_mlp_pallas(x, w1, b1, w2, b2, w3, b3, block_b=block_b,
+                            interpret=not _on_tpu())

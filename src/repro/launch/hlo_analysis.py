@@ -1,0 +1,183 @@
+"""Post-compile HLO analysis: collective-byte accounting with while-loop
+(scan) trip-count attribution.
+
+XLA's ``cost_analysis()`` counts a `lax.scan` body ONCE (calibrated on this
+container, DESIGN.md §7), so naive collective sums undercount by ~n_layers.
+This parser:
+  1. splits the HLO text into computations,
+  2. finds while-loops, extracts the trip count from the loop condition's
+     compare-against-constant,
+  3. propagates multipliers down the call graph (body of a while inside a
+     while multiplies),
+  4. sums wire bytes per collective kind with standard ring-cost factors:
+       all-gather       (n-1)/n * out_bytes
+       reduce-scatter   (n-1)/n * in_bytes
+       all-reduce       2(n-1)/n * bytes
+       all-to-all       (n-1)/n * bytes
+       collective-permute        bytes
+Counts are PER DEVICE (the HLO is the per-device partitioned module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%|)(\S+)\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->", re.M)
+_WHILE_RE = re.compile(
+    r"while\(.*?\)[^\n]*?condition=%?([\w\.\-]+)[^\n]*?body=%?([\w\.\-]+)"
+    r"|while\(.*?\)[^\n]*?body=%?([\w\.\-]+)[^\n]*?condition=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_RE2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    """Total bytes of a result signature like 'bf16[8,128]' or a tuple."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, str]:
+    """computation name -> body text."""
+    comps: Dict[str, str] = {}
+    lines = hlo.splitlines()
+    name, buf = None, []
+    for ln in lines:
+        m = _COMP_RE.match(ln)
+        if m and ("{" in ln or ln.rstrip().endswith("{")):
+            if name is not None:
+                comps[name] = "\n".join(buf)
+            name = m.group(1)
+            buf = [ln]
+        else:
+            buf.append(ln)
+    if name is not None:
+        comps[name] = "\n".join(buf)
+    return comps
+
+
+def _trip_count(cond_body: str) -> int:
+    """Largest s32 constant in the loop condition ~= trip count."""
+    consts = [int(c) for c in _CONST_RE.findall(cond_body)]
+    return max(consts) if consts else 1
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(1, len([x for x in m.group(1).split(",") if x.strip()]))
+    m = _GROUPS_RE2.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    return n_devices
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_kind_bytes: Dict[str, float]
+    per_kind_count: Dict[str, int]
+    total_wire_bytes: float
+    n_while_loops: int
+    trip_counts: Dict[str, int]
+
+    def summary(self) -> Dict:
+        return dict(per_kind_bytes=self.per_kind_bytes,
+                    per_kind_count=self.per_kind_count,
+                    total_wire_bytes=self.total_wire_bytes,
+                    n_while_loops=self.n_while_loops,
+                    trip_counts=self.trip_counts)
+
+
+def analyze_collectives(hlo: str, n_devices: int = 1) -> CollectiveStats:
+    comps = _split_computations(hlo)
+
+    # multipliers: DFS through call graph from every root computation
+    mult: Dict[str, int] = {}
+    body_trip: Dict[str, int] = {}
+    for cname, body in comps.items():
+        for m in _WHILE_RE.finditer(body):
+            cond = m.group(1) or m.group(4)
+            wbody = m.group(2) or m.group(3)
+            if cond in comps and wbody:
+                body_trip[wbody] = max(body_trip.get(wbody, 1),
+                                       _trip_count(comps[cond]))
+
+    entry = None
+    for cname, body in comps.items():
+        if "ENTRY" in body.split("\n")[0] or cname.startswith("main"):
+            entry = cname
+            break
+    if entry is None and comps:
+        entry = next(iter(comps))
+
+    def visit(cname: str, m: int, seen) -> None:
+        if cname in seen or cname not in comps:
+            return
+        seen = seen | {cname}
+        mult[cname] = max(mult.get(cname, 0), m)
+        body = comps[cname]
+        for w in _WHILE_RE.finditer(body):
+            cond = w.group(1) or w.group(4)
+            wbody = w.group(2) or w.group(3)
+            if wbody in comps:
+                visit(wbody, m * body_trip.get(wbody, 1), seen)
+            if cond in comps:
+                visit(cond, m * body_trip.get(wbody, 1), seen)
+        for c in _CALL_RE.finditer(body):
+            visit(c.group(1), m, seen)
+
+    if entry:
+        visit(entry, 1, frozenset())
+    for cname in comps:
+        mult.setdefault(cname, 1)
+
+    kinds_bytes: Dict[str, float] = {}
+    kinds_count: Dict[str, int] = {}
+    total = 0.0
+    for cname, body in comps.items():
+        m = mult[cname]
+        for line in body.splitlines():
+            cm = _COLL_RE.match(line)
+            if not cm:
+                continue
+            sig, kind, phase = cm.group(2), cm.group(3), cm.group(4)
+            if phase == "-done":
+                continue  # counted at -start
+            nbytes = _shape_bytes(sig)
+            n = _group_size(line, n_devices)
+            frac = (n - 1) / max(n, 1)
+            if kind == "all-reduce":
+                wire = 2.0 * frac * nbytes
+            elif kind == "collective-permute":
+                wire = float(nbytes)
+            else:
+                wire = frac * nbytes
+            kinds_bytes[kind] = kinds_bytes.get(kind, 0.0) + wire * m
+            kinds_count[kind] = kinds_count.get(kind, 0) + m
+            total += wire * m
+    return CollectiveStats(per_kind_bytes=kinds_bytes,
+                           per_kind_count=kinds_count,
+                           total_wire_bytes=total,
+                           n_while_loops=len(body_trip),
+                           trip_counts=body_trip)

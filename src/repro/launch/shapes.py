@@ -1,0 +1,72 @@
+"""Assigned input-shape sets and ShapeDtypeStruct stand-ins per cell.
+
+Shapes (assignment):
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> prefill_step
+  decode_32k   seq 32,768  global_batch 128   -> serve_step (1 new token)
+  long_500k    seq 524,288 global_batch 1     -> serve_step, sub-quadratic
+                                                 archs only (skips recorded)
+
+``input_specs`` returns ShapeDtypeStructs only — no allocation — including
+stub modality frontends (precomputed frame/patch embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+SHAPES: Dict[str, Dict] = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+# archs with a sub-quadratic / O(window) long-context mechanism
+LONG_OK = ("mixtral-8x7b", "jamba-v0.1-52b", "xlstm-1.3b")
+
+
+def cell_supported(cfg: ArchConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and cfg.name not in LONG_OK and not cfg.subquadratic:
+        return False, ("SKIP: pure full-attention arch, O(L) KV at 500k has "
+                       "no architectural sub-quadratic mechanism "
+                       "(DESIGN.md long_500k skip list)")
+    return True, ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def ctx_spec(cfg: ArchConfig, batch: int) -> Optional[jax.ShapeDtypeStruct]:
+    """Stub modality frontend: precomputed frame/patch embeddings."""
+    dt = L.dtype_of(cfg.param_dtype)
+    if cfg.is_encdec:
+        return sds((batch, cfg.n_audio_frames, cfg.d_model), dt)
+    if cfg.family == "vlm" and cfg.n_context_tokens:
+        return sds((batch, cfg.n_context_tokens, cfg.d_model), dt)
+    return None
+
+
+def input_specs(cfg: ArchConfig, shape: str) -> Dict[str, object]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    info = SHAPES[shape]
+    S, B = info["seq_len"], info["global_batch"]
+    if info["kind"] == "train":
+        out = dict(tokens=sds((B, S), jnp.int32),
+                   labels=sds((B, S), jnp.int32))
+    elif info["kind"] == "prefill":
+        out = dict(tokens=sds((B, S), jnp.int32))
+    else:  # decode: one new token against a seq_len KV cache
+        out = dict(token=sds((B, 1), jnp.int32),
+                   pos=sds((), jnp.int32))
+    c = ctx_spec(cfg, B)
+    if c is not None and info["kind"] != "decode":
+        out["ctx"] = c
+    return out

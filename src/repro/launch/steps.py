@@ -1,0 +1,139 @@
+"""Step builders shared by the dry-run, trainer and server: produce the
+(jit-able function, input ShapeDtypeStructs, shardings) triple for each
+(arch x shape-kind) cell on a given mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed import sharding as sh
+from repro.launch import shapes as shp
+from repro.launch.mesh import dp_axes, fsdp_axes
+from repro.models import layers as L
+from repro.models import lm
+from repro.optim.trainer import TrainConfig, TrainState, create_state, \
+    make_train_step
+
+
+def _params_bytes(cfg: ArchConfig) -> float:
+    by = {"float32": 4}.get(cfg.param_dtype, 2)
+    return cfg.param_counts()["total"] * by
+
+
+def param_templates(cfg: ArchConfig, mesh: Mesh, *, serve: bool = False):
+    """(params SDS tree, shardings) without allocating.
+
+    serve=True uses the weight-stationary Megatron col/row layout when the
+    replicated (non-expert) footprint fits per-device HBM; otherwise falls
+    back to the FSDP train layout (documented in EXPERIMENTS §Perf)."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    p_sds = jax.eval_shape(lambda k: lm.init_params(k, cfg), key)
+    fsdp = fsdp_axes(mesh, params_bytes=_params_bytes(cfg))
+    if serve:
+        # weight-stationary layout replicates over the data axes: total
+        # per-device weight bytes = all params / tp (experts are EP- or
+        # tp-sharded, non-experts tp-sharded) — must fit HBM with the cache
+        per_dev_bytes = _params_bytes(cfg) / mesh.shape["model"]
+        if per_dev_bytes <= 12e9:
+            return p_sds, sh.param_shardings(p_sds, mesh, fsdp=fsdp,
+                                             tp="model", serve=True)
+    p_sh = sh.param_shardings(p_sds, mesh, fsdp=fsdp, tp="model")
+    return p_sds, p_sh
+
+
+def default_microbatches(cfg: ArchConfig) -> int:
+    """Gradient-accumulation splits sized to fit v5e HBM (16 GB/chip).
+
+    §Perf train hillclimb: every microbatch re-gathers the FSDP-sharded
+    weights (fwd+bwd), so fewer microbatches = proportionally less ICI
+    wire; chunked cross-entropy bought back the activation memory that
+    previously forced mb=4 on the 70-110B dense archs."""
+    n = cfg.param_counts()["total"]
+    if n >= 6e10:
+        return 2
+    return 1
+
+
+def build_train(cfg: ArchConfig, mesh: Mesh, shape: str = "train_4k",
+                tc: Optional[TrainConfig] = None):
+    """-> (step_fn, (state_sds, batch_sds), (state_sh, batch_sh), out_sh)."""
+    tc = tc or TrainConfig(microbatches=default_microbatches(cfg))
+    info = shp.SHAPES[shape]
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    state_sds = jax.eval_shape(
+        lambda k: create_state(lm.init_params(k, cfg)), key)
+    fsdp = fsdp_axes(mesh, params_bytes=_params_bytes(cfg))
+    p_sh = sh.param_shardings(state_sds.params, mesh, fsdp=fsdp, tp="model")
+    opt_m_sh = sh.param_shardings(state_sds.opt.m, mesh, fsdp=fsdp, tp="model")
+    opt_v_sh = sh.param_shardings(state_sds.opt.v, mesh, fsdp=fsdp, tp="model")
+    rep = sh.replicated(mesh)
+    state_sh = TrainState(params=p_sh,
+                          opt=type(state_sds.opt)(m=opt_m_sh, v=opt_v_sh,
+                                                  t=rep),
+                          step=rep)
+    dp = dp_axes(mesh)
+    batch_sds = dict(shp.input_specs(cfg, shape))
+    batch_sh = {}
+    for k, v in batch_sds.items():
+        batch_sh[k] = NamedSharding(mesh, P(dp, *([None] * (v.ndim - 1))))
+    step_fn = make_train_step(cfg, tc)
+
+    def fn(state, batch):
+        new_state, metrics = step_fn(state, batch)
+        return new_state, metrics
+
+    out_sh = (state_sh, dict(loss=rep, lr=rep, grad_norm=rep))
+    return fn, (state_sds, batch_sds), (state_sh, batch_sh), out_sh
+
+
+def build_prefill(cfg: ArchConfig, mesh: Mesh, shape: str = "prefill_32k"):
+    info = shp.SHAPES[shape]
+    p_sds, p_sh = param_templates(cfg, mesh)
+    dp = dp_axes(mesh)
+    inputs = shp.input_specs(cfg, shape)
+    in_sh = dict(tokens=NamedSharding(mesh, P(dp, None)))
+    if "ctx" in inputs:
+        in_sh["ctx"] = NamedSharding(mesh, P(dp, None, "model"))
+
+    def fn(params, tokens, ctx=None):
+        logits, caches = lm.prefill(params, cfg, tokens, ctx)
+        # serve-ready caches: prefix padded to capacity + ring tails + plen
+        caches = lm.extend_caches(caches, cfg, info["seq_len"])
+        return logits, caches
+
+    cache_sds = jax.eval_shape(
+        lambda: lm.init_caches(cfg, info["global_batch"], info["seq_len"]))
+    cache_sh = sh.cache_shardings(cache_sds, mesh, dp=dp, tp="model",
+                                  shard_seq=True)
+    vocab_ax = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+    out_sh = (NamedSharding(mesh, P(dp, None, vocab_ax)), cache_sh)
+    return fn, (p_sds, inputs), (p_sh, in_sh), out_sh
+
+
+def build_serve(cfg: ArchConfig, mesh: Mesh, shape: str):
+    """Decode step: one new token against a seq_len cache."""
+    info = shp.SHAPES[shape]
+    S, B = info["seq_len"], info["global_batch"]
+    p_sds, p_sh = param_templates(cfg, mesh, serve=True)
+    dp = dp_axes(mesh) if B > 1 else None
+    cache_sds = jax.eval_shape(lambda: lm.init_caches(cfg, B, S))
+    # long-context single-request: shard the sequence across BOTH axes
+    seq_tp = ("data", "model") if B == 1 else "model"
+    cache_sh = sh.cache_shardings(cache_sds, mesh, dp=dp, tp=seq_tp
+                                  if B == 1 else "model", shard_seq=True)
+    inputs = shp.input_specs(cfg, shape)
+    rep = sh.replicated(mesh)
+    in_sh = dict(token=NamedSharding(mesh, P(dp, None)), pos=rep)
+
+    def fn(params, caches, token, pos):
+        logits, new_caches = lm.decode_step(params, cfg, token, caches, pos)
+        return logits, new_caches
+
+    out_sh = (NamedSharding(mesh, P(dp, None, None)), cache_sh)
+    return fn, (p_sds, cache_sds, inputs), (p_sh, cache_sh, in_sh), out_sh

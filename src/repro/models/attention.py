@@ -1,0 +1,168 @@
+"""Attention primitives: chunked-online-softmax (flash-style) training /
+prefill attention and single-token decode attention, with GQA, sliding
+windows and cross-attention.
+
+The chunked path IS the jnp reference of ``repro.kernels.flash_attention``;
+on real TPUs the Pallas kernel replaces it behind the same signature
+(``use_pallas`` flag in the model config, see repro.kernels.ops).  It never
+materialises the full [S, S] score matrix, which keeps the 32k prefill and
+500k cells inside per-device HBM on the dry-run meshes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import einsum_f32, shard_hint
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, window: int = 0,
+                      q_chunk: int = 512, q_offset: int = 0) -> jnp.ndarray:
+    """Flash-style attention without materialising [Sq, Sk].
+
+    q: [B, Sq, H, hd];  k/v: [B, Sk, Hk, hd] (GQA: H % Hk == 0).
+    window > 0 applies sliding-window masking (Mixtral/Jamba long-context).
+    q_offset: absolute position of q[0] (prefill continuation / cross-chunk).
+    Returns [B, Sq, H, hd].
+    """
+    B, Sq, H, hd = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    n_rep = H // Hk
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    n_chunks = max(1, (Sq + q_chunk - 1) // q_chunk)
+    pad = n_chunks * q_chunk - Sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qc = q.reshape(B, n_chunks, q_chunk, H, hd)
+
+    kpos = jnp.arange(Sk)
+
+    def one_chunk(ci, qi):
+        # qi: [B, C, H, hd]
+        qpos = q_offset + ci * q_chunk + jnp.arange(q_chunk)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qi.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        mask = jnp.ones((q_chunk, Sk), bool)
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window and window > 0:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        # online-softmax within the chunk (numerically = full softmax here
+        # because all Sk keys are visible per chunk)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        denom = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bhqk,bkhd->bqhd", (p / jnp.maximum(denom, 1e-30)),
+                       v.astype(jnp.float32))
+        return o.astype(v.dtype)
+
+    # remat each chunk: backward recomputes scores per chunk instead of
+    # stacking all chunks' [B,H,C,Sk] probabilities (which would rebuild the
+    # full attention matrix and dominate peak memory at 32k prefill).
+    outs = jax.lax.map(lambda args: jax.checkpoint(one_chunk)(*args),
+                       (jnp.arange(n_chunks), jnp.moveaxis(qc, 1, 0)))
+    vd = v.shape[-1]   # may differ from hd (MLA: v_head_dim != qk dim)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, n_chunks * q_chunk, H, vd)
+    return out[:, :Sq]
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, length: jnp.ndarray,
+                     *, window: int = 0) -> jnp.ndarray:
+    """One-token attention against a cache.
+
+    q: [B, 1, H, hd]; k/v_cache: [B, S, Hk, hd]; length: valid prefix length
+    (scalar or [B]).  Returns [B, 1, H, hd].
+    """
+    B, S, Hk, hd = k_cache.shape
+    H = q.shape[2]
+    k = _repeat_kv(k_cache, H // Hk)
+    v = _repeat_kv(v_cache, H // Hk)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale         # [B,H,1,S]
+    pos = jnp.arange(S)
+    length = jnp.asarray(length)
+    valid = pos[None, :] < jnp.reshape(length, (-1, 1))
+    if window and window > 0:
+        valid = valid & (pos[None, :] >= jnp.reshape(length, (-1, 1)) - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(v_cache.dtype)
+
+
+def decode_attention_stats(q: jnp.ndarray, k_cache: jnp.ndarray,
+                           v_cache: jnp.ndarray, length: jnp.ndarray):
+    """Segment attention returning online-softmax stats for cross-segment
+    merging: (o_unnormalised [B,1,H,dv], m [B,H,1], l [B,H,1]).
+
+    Used by the two-tier decode cache (sharded frozen prefix + local ring
+    tail): a dynamic-update-slice at a traced position into a
+    sequence-SHARDED cache forces GSPMD to rematerialise the whole cache
+    every step (§Perf decode hillclimb), so writes go to the small
+    replicated tail and segments merge here.
+    """
+    B, S, Hk, hd = k_cache.shape
+    H = q.shape[2]
+    k = _repeat_kv(k_cache, H // Hk)
+    v = _repeat_kv(v_cache, H // Hk)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    # bf16 operands + f32 accumulation (preferred_element_type): casting
+    # k/v to f32 would let XLA hoist a convert of the WHOLE stacked cache
+    # out of the layer scan (a full f32 copy of the cache in HBM)
+    s = einsum_f32("bqhd,bkhd->bhqk", q.astype(k.dtype), k) * scale
+    # keep the scores sharded along the CACHE sequence axis — otherwise
+    # Shardy prefers head-sharding the scores and all-gathers the whole
+    # prefix K/V every layer (the 150 GiB/step baseline, §Perf decode)
+    s = shard_hint(s, "__dp__", None, None, "model")
+    pos = jnp.arange(S)
+    valid = pos[None, :] < jnp.reshape(jnp.asarray(length), (-1, 1))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                # [B,H,1]
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)                                # [B,H,1]
+    o = einsum_f32("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+    return o, m, l
+
+
+def merge_attention(parts, out_dtype):
+    """Combine per-segment (o, m, l) stats into normalised attention."""
+    M = parts[0][1]
+    for _, m, _ in parts[1:]:
+        M = jnp.maximum(M, m)
+    o_tot = 0.0
+    l_tot = 0.0
+    for o, m, l in parts:
+        w = jnp.exp(m - M)                                  # [B,H,1]
+        o_tot = o_tot + o * w.transpose(0, 2, 1)[..., None]
+        l_tot = l_tot + l * w
+    l_tot = jnp.maximum(l_tot, 1e-30)
+    return (o_tot / l_tot.transpose(0, 2, 1)[..., None]).astype(out_dtype)
+
+
+def cache_update(k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                 k_new: jnp.ndarray, v_new: jnp.ndarray,
+                 pos: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Write [B, 1, Hk, hd] new KV at position pos (ring-indexed by caller
+    for sliding-window caches)."""
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+    return k_cache, v_cache

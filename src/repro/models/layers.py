@@ -1,0 +1,146 @@
+"""Base layers for the functional (flax-free) model zoo.
+
+Conventions:
+  * params are nested dicts of jnp arrays; init fns take (key, ...) and
+    return the dict; apply fns are pure.
+  * compute dtype is bf16/fp16 (cfg.param_dtype); norms and softmax run in
+    float32; block outputs are cast back so `lax.scan` carries stay stable.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float16": jnp.float16,
+          "float32": jnp.float32}
+
+
+def dtype_of(name: str):
+    return DTYPES[name]
+
+
+def linear_init(key, n_in: int, n_out: int, dtype, *, bias: bool = False,
+                scale: Optional[float] = None) -> Dict:
+    scale = scale if scale is not None else (1.0 / np.sqrt(n_in))
+    p = dict(w=(jax.random.normal(key, (n_in, n_out)) * scale).astype(dtype))
+    if bias:
+        p["b"] = jnp.zeros((n_out,), dtype)
+    return p
+
+
+def linear(p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int, dtype) -> Dict:
+    return dict(scale=jnp.ones((d,), dtype))
+
+
+def rmsnorm(p: Dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> Dict:
+    return dict(w=(jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype))
+
+
+def embed(p: Dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["w"], tokens, axis=0)
+
+
+# ------------------------------------------------------------------- RoPE --
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: [..., T, H, hd]; positions: [..., T] (int)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., T, hd/2]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def shard_hint(x: jnp.ndarray, *axes) -> jnp.ndarray:
+    """Best-effort GSPMD sharding constraint, mesh-agnostic.
+
+    Axis tokens: mesh axis names, the special "__dp__" (expands to
+    ("pod","data") when a pod axis exists), or None.  Silently a no-op when
+    no ambient mesh is set (unit tests, single device) or when an axis is
+    missing / does not divide the dimension.
+    """
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        names = set(mesh.axis_names)
+        spec = []
+        for dim, ax in zip(x.shape, axes):
+            if ax == "__dp__":
+                ax = tuple(a for a in ("pod", "data") if a in names) or None
+            if ax is None:
+                spec.append(None)
+                continue
+            axt = (ax,) if isinstance(ax, str) else tuple(ax)
+            if not all(a in names for a in axt):
+                spec.append(None)
+                continue
+            size = 1
+            for a in axt:
+                size *= mesh.shape[a]
+            spec.append(ax if dim % size == 0 else None)
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*spec))
+    except Exception:
+        return x
+
+
+def einsum_f32(eq: str, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Mixed-precision einsum with f32 accumulation.
+
+    On TPU: bf16 operands + preferred_element_type=f32 (MXU-native, avoids
+    XLA hoisting f32 copies of stacked operands out of scans).  On CPU the
+    runtime's DotThunk cannot execute BF16xBF16=F32, so operands are upcast
+    (the hoisted-copy concern is a CPU-only artifact anyway).
+    """
+    if jax.default_backend() == "tpu":
+        return jnp.einsum(eq, a, b, preferred_element_type=jnp.float32)
+    return jnp.einsum(eq, a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def softmax_f32(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    return jax.nn.softmax(x.astype(jnp.float32), axis=axis)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token CE; logits [..., V] (any float dtype), labels int.
+
+    Implemented as a masked reduction (iota == label) instead of a gather:
+    a gather over the vocab axis would force GSPMD to re-replicate the
+    TP-sharded logits ([B,S,V] f32 per device — hundreds of GiB at the
+    production shapes); the masked reduce stays shard-local + one psum.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = labels[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    return jnp.mean(logz - gold)

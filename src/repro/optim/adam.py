@@ -1,0 +1,52 @@
+"""Minimal functional Adam/AdamW on pytrees (no optax dependency).
+
+Used by the DSE plane (SAC/world-model/surrogate optimizers) and as the
+building block of the workload-plane trainer (repro.optim.trainer adds
+weight decay, clipping, schedules and sharded state).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    m: Any
+    v: Any
+    t: jnp.ndarray
+
+
+def adam_init(params: Any) -> AdamState:
+    return AdamState(m=jax.tree.map(jnp.zeros_like, params),
+                     v=jax.tree.map(jnp.zeros_like, params),
+                     t=jnp.zeros((), jnp.int32))
+
+
+def adam_update(params: Any, grads: Any, state: AdamState, *, lr,
+                b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                weight_decay: float = 0.0, grad_clip: float = 0.0):
+    """One Adam(W) step; returns (new_params, new_state).
+
+    lr may be a python float or a traced scalar (schedules).
+    """
+    if grad_clip and grad_clip > 0.0:
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)) + 1e-12)
+        scale = jnp.minimum(1.0, grad_clip / gnorm)
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    t = state.t + 1
+    m = jax.tree.map(lambda mu, g: b1 * mu + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda nu, g: b2 * nu + (1 - b2) * jnp.square(g),
+                     state.v, grads)
+    bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, mu, nu):
+        step = lr * (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+        if weight_decay:
+            step = step + lr * weight_decay * p
+        return (p - step).astype(p.dtype)
+
+    return jax.tree.map(upd, params, m, v), AdamState(m=m, v=v, t=t)

@@ -1,0 +1,98 @@
+"""Workload-plane trainer: AdamW + clipping + schedule + microbatch
+accumulation, with sharded optimizer state (same specs as params -> fully
+FSDP'd Adam moments).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.optim.adam import AdamState, adam_init, adam_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamState
+    step: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    microbatches: int = 1     # gradient accumulation splits
+
+
+def lr_schedule(tc: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, tc.warmup_steps))
+    prog = jnp.clip((step - tc.warmup_steps)
+                    / max(1, tc.total_steps - tc.warmup_steps), 0.0, 1.0)
+    cos = 0.1 + 0.9 * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tc.lr * warm * cos
+
+
+def create_state(params: Any) -> TrainState:
+    # fp32 Adam moments regardless of param dtype
+    opt = AdamState(
+        m=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        v=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        t=jnp.zeros((), jnp.int32))
+    return TrainState(params=params, opt=opt, step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg: ArchConfig, tc: TrainConfig,
+                    loss_fn: Optional[Callable] = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch: dict(tokens [B,S], labels [B,S], ctx optional).
+    Microbatching splits the batch on axis 0 and accumulates grads in f32.
+    """
+    loss_fn = loss_fn or (lambda p, b: lm.loss_fn(
+        p, cfg, b["tokens"], b["labels"], b.get("ctx")))
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        if tc.microbatches > 1:
+            def split(x):
+                B = x.shape[0]
+                mb = B // tc.microbatches
+                return x.reshape(tc.microbatches, mb, *x.shape[1:])
+            mbatch = {k: split(v) for k, v in batch.items()}
+
+            def acc_fn(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = grads_of(state.params, mb)
+                g = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32),
+                                 g_acc, g)
+                return (loss_acc + loss, g), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                state.params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (0.0, zero), mbatch)
+            loss = loss / tc.microbatches
+            grads = jax.tree.map(lambda g: g / tc.microbatches, grads)
+        else:
+            loss, grads = grads_of(state.params, batch)
+        lr = lr_schedule(tc, state.step)
+        params, opt = adam_update(
+            state.params, grads, state.opt, lr=lr,
+            weight_decay=tc.weight_decay, grad_clip=tc.grad_clip)
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)))
+        new_state = TrainState(params=params, opt=opt, step=state.step + 1)
+        return new_state, dict(loss=loss, lr=lr, grad_norm=gnorm)
+
+    return train_step

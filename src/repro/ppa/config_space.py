@@ -1,0 +1,206 @@
+"""Design-point (chip configuration) vector space.
+
+The RL agent's *design point* is a 30-dim vector of chip/mesh/TCC/partition
+parameters (paper Tables 3 and 7).  We keep it as a flat ``float32`` vector so
+the analytic PPA evaluator can be ``jax.vmap``-ed over thousands of candidate
+configurations, which is the TPU-native replacement for the paper's
+sequential per-episode simulator (DESIGN.md §3.1).
+
+Layout (name, min, max, quantization step or 0 for continuous):
+  0  mesh_w         discrete mesh width                   (Table 3 idx 0)
+  1  mesh_h         discrete mesh height                  (Table 3 idx 1)
+  2  sc_x           super-cluster grid x                  (Table 3 idx 2)
+  3  sc_y           super-cluster grid y                  (Table 3 idx 3)
+  4  fetch          FETCH_SIZE (mean; per-tile derived)   (Table 7)
+  5  stanum         reservation stations (uniform)        (Table 7)
+  6  vlen           vector length bits (mean; per-tile)   (Table 7)
+  7  dmem_kb        data memory per tile (mean)           (Table 7)
+  8  wmem_kb        weight memory per tile (mean)         (Table 7)
+  9  imem_kb        instruction memory per tile (mean)    (Table 7)
+  10 dflit          NoC flit width bits (chip-level)      (Table 7)
+  11 xr_wp          scalar reg write ports                (Table 7)
+  12 vr_wp          vector reg write ports                (Table 7)
+  13 xdpnum         scalar dispatch ports                 (Table 7)
+  14 vdpnum         vector dispatch ports                 (Table 7)
+  15 freq_frac      f_clk / f_max(node)                   (§3.15)
+  16 precision      0=FP16 .. 1=INT8-heavy mix            (Table 3 "precision")
+  17 dmem_in_frac   DMEM input partition                  (Eq. 15)
+  18 dmem_out_frac  DMEM output partition                 (Eq. 15)
+  19 lb_alpha       load-balance control (placement load weight)
+  20 lb_beta        load-balance control (hop-distance weight)
+  21 rho_matmul     matmul partition delta                (Eq. 11)
+  22 rho_conv       conv partition delta                  (Eq. 12)
+  23 rho_general    general partition delta               (Eq. 13)
+  24 stream_in      input streaming ratio
+  25 stream_out     output streaming ratio
+  26 sub_matmul     sub-matmul partition fraction
+  27 allreduce_frac all-reduce fraction
+  28 kv_quant       KV quantization: 0=FP16 1=INT8 2=INT4 (Eq. 29)
+  29 kv_window_frac sliding-window fraction of L          (Eq. 30)
+
+The 4 heterogeneity-spread controls (DESIGN.md: extra continuous action dims)
+modulate the post-RL per-TCC derivation and live in the *action* space, not
+the design vector (see ``repro.core.actions``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+FIELDS: List[Tuple[str, float, float, float]] = [
+    ("mesh_w", 2, 64, 1),
+    ("mesh_h", 2, 64, 1),
+    ("sc_x", 1, 8, 1),
+    ("sc_y", 1, 8, 1),
+    ("fetch", 1, 16, 1),
+    ("stanum", 1, 32, 1),
+    ("vlen", 128, 2048, 128),
+    ("dmem_kb", 16, 512, 16),
+    ("wmem_kb", 256, 131072, 256),
+    ("imem_kb", 1, 128, 1),
+    ("dflit", 64, 8192, 64),
+    ("xr_wp", 1, 16, 1),
+    ("vr_wp", 1, 16, 1),
+    ("xdpnum", 1, 16, 1),
+    ("vdpnum", 1, 16, 1),
+    ("freq_frac", 0.01, 1.0, 0.0),
+    ("precision", 0.0, 1.0, 0.0),
+    ("dmem_in_frac", 0.10, 0.80, 0.0),
+    ("dmem_out_frac", 0.05, 0.50, 0.0),
+    ("lb_alpha", 0.0, 1.0, 0.0),
+    ("lb_beta", 0.0, 1.0, 0.0),
+    ("rho_matmul", 0.0, 1.0, 0.0),
+    ("rho_conv", 0.0, 1.0, 0.0),
+    ("rho_general", 0.0, 1.0, 0.0),
+    ("stream_in", 0.0, 1.0, 0.0),
+    ("stream_out", 0.0, 1.0, 0.0),
+    ("sub_matmul", 0.0, 1.0, 0.0),
+    ("allreduce_frac", 0.0, 1.0, 0.0),
+    ("kv_quant", 0, 2, 1),
+    ("kv_window_frac", 0.05, 1.0, 0.0),
+]
+
+NAMES = [f[0] for f in FIELDS]
+IDX: Dict[str, int] = {name: i for i, name in enumerate(NAMES)}
+DIM = len(FIELDS)
+LO = np.array([f[1] for f in FIELDS], dtype=np.float32)
+HI = np.array([f[2] for f in FIELDS], dtype=np.float32)
+STEP = np.array([f[3] for f in FIELDS], dtype=np.float32)
+
+RHO_BASE = 0.3  # paper §3.5: default rho_base
+
+
+def clip(cfg):
+    """Project a raw vector into bounds (part of Eq. 68's Pi_C)."""
+    return jnp.clip(cfg, LO, HI)
+
+
+def quantize(cfg):
+    """Snap discrete fields to hardware-supported steps (Table 7 note)."""
+    stepped = jnp.where(STEP > 0, jnp.round(cfg / jnp.where(STEP > 0, STEP, 1.0)) *
+                        jnp.where(STEP > 0, STEP, 1.0), cfg)
+    return jnp.clip(stepped, LO, HI)
+
+
+def project(cfg):
+    """Full constraint projection Pi_C (Eq. 68): bounds + quantization."""
+    return quantize(clip(cfg))
+
+
+def get(cfg, name: str):
+    return cfg[..., IDX[name]]
+
+
+def set_field(cfg, name: str, value):
+    return cfg.at[..., IDX[name]].set(value)
+
+
+def to_dict(cfg) -> Dict[str, float]:
+    arr = np.asarray(cfg, dtype=np.float64)
+    return {name: float(arr[..., i]) for i, name in enumerate(NAMES)}
+
+
+def from_dict(d: Dict[str, float]) -> np.ndarray:
+    cfg = default_config()
+    for k, v in d.items():
+        cfg[IDX[k]] = v
+    return cfg
+
+
+def default_config() -> np.ndarray:
+    """Paper's initial mesh m0 neighbourhood: mid-range everything."""
+    cfg = (LO + HI) / 2.0
+    cfg[IDX["mesh_w"]] = 8
+    cfg[IDX["mesh_h"]] = 8
+    cfg[IDX["sc_x"]] = 2
+    cfg[IDX["sc_y"]] = 2
+    cfg[IDX["fetch"]] = 4
+    cfg[IDX["stanum"]] = 4
+    cfg[IDX["vlen"]] = 512
+    cfg[IDX["dmem_kb"]] = 128
+    cfg[IDX["wmem_kb"]] = 8192
+    cfg[IDX["imem_kb"]] = 8
+    cfg[IDX["dflit"]] = 1024
+    cfg[IDX["xr_wp"]] = 2
+    cfg[IDX["vr_wp"]] = 2
+    cfg[IDX["xdpnum"]] = 2
+    cfg[IDX["vdpnum"]] = 2
+    cfg[IDX["freq_frac"]] = 1.0
+    cfg[IDX["precision"]] = 0.0
+    cfg[IDX["dmem_in_frac"]] = 0.4
+    cfg[IDX["dmem_out_frac"]] = 0.2
+    cfg[IDX["lb_alpha"]] = 0.5
+    cfg[IDX["lb_beta"]] = 0.5
+    cfg[IDX["rho_matmul"]] = 0.3
+    cfg[IDX["rho_conv"]] = 0.1
+    cfg[IDX["rho_general"]] = 0.1
+    cfg[IDX["stream_in"]] = 0.5
+    cfg[IDX["stream_out"]] = 0.5
+    cfg[IDX["sub_matmul"]] = 0.5
+    cfg[IDX["allreduce_frac"]] = 0.3
+    cfg[IDX["kv_quant"]] = 0
+    cfg[IDX["kv_window_frac"]] = 1.0
+    return cfg.astype(np.float32)
+
+
+def random_config(rng: np.random.Generator) -> np.ndarray:
+    """Uniform sample in bounds (used by the epsilon-greedy branch and by
+    the random-search baseline of Table 21)."""
+    cfg = rng.uniform(LO, HI).astype(np.float32)
+    return np.asarray(project(jnp.asarray(cfg)))
+
+
+def paper_llama_3nm_config() -> np.ndarray:
+    """The paper's reported best 3nm configuration for Llama 3.1 8B
+    (Tables 9/14/16): mesh 41x42, VLEN mix averaging 1536, FETCH ~2.5,
+    DFLIT 2048, STANUM 3, DMEM 64 KB, IMEM 6 KB, f = f_max.
+    Used as the faithful-reproduction anchor in tests/benchmarks."""
+    cfg = default_config()
+    for k, v in dict(mesh_w=41, mesh_h=42, sc_x=4, sc_y=4, fetch=2.5, stanum=3,
+                     vlen=1536, dmem_kb=64, wmem_kb=9800, imem_kb=6, dflit=2048,
+                     xr_wp=2, vr_wp=2, xdpnum=2, vdpnum=2, freq_frac=1.0,
+                     precision=0.0, rho_matmul=0.55, rho_conv=0.1,
+                     rho_general=0.2, kv_quant=0, kv_window_frac=1.0).items():
+        cfg[IDX[k]] = v
+    return cfg
+
+
+def paper_smolvlm_config(f_max_hz: float = 1e9) -> np.ndarray:
+    """Paper Table 19 SmolVLM low-power point: 2x4 mesh @ 10 MHz ABSOLUTE
+    (freq_frac is relative to the node's f_max, so it is node-dependent)."""
+    cfg = paper_smolvlm_3nm_config()
+    cfg[IDX["freq_frac"]] = float(np.clip(1e7 / f_max_hz, 0.01, 1.0))
+    return cfg
+
+
+def paper_smolvlm_3nm_config() -> np.ndarray:
+    """Paper Table 19 SmolVLM low-power 3nm point: 2x4 mesh @ 10 MHz."""
+    cfg = default_config()
+    for k, v in dict(mesh_w=2, mesh_h=4, sc_x=1, sc_y=1, fetch=1, stanum=1,
+                     vlen=512, dmem_kb=32, wmem_kb=81920, imem_kb=2, dflit=256,
+                     xr_wp=1, vr_wp=1, xdpnum=1, vdpnum=1, freq_frac=0.01,
+                     precision=0.0, kv_quant=1, kv_window_frac=0.5).items():
+        cfg[IDX[k]] = v
+    return cfg

@@ -1,0 +1,121 @@
+"""Learned PPA surrogate with node-dependent heads (paper §3.15, Eq. 61-67).
+
+A small MLP maps (state, action/config, node-constants) -> (power, perf,
+area) estimates.  Trained online from evaluated transitions (Eq. 65), with
+the uncertainty gate of Eq. 66-67: predictions are *accepted* (used in place
+of a full evaluation, e.g. inside MPC rollouts) only when the running
+residual variance is below tau_sur.
+
+Pure JAX; the train step is jit'd and the predict path is vmap-able so the
+MPC planner can score K*H candidates in one fused call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ppa.analytic import M_IDX, NODE_DIM
+
+SUR_HIDDEN = (128, 64)
+N_TARGETS = 3  # power, perf, area  (Eq. 61)
+TARGET_NAMES = ("power_mw", "perf_gops", "area_mm2")
+# log1p-scaled targets; weights w_q of Eq. 65
+TARGET_WEIGHTS = jnp.array([1.0, 1.0, 1.0])
+TAU_SUR_DEFAULT = 0.05
+
+
+def init_params(rng: jax.Array, in_dim: int) -> Dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    h1, h2 = SUR_HIDDEN
+
+    def dense(key, n_in, n_out):
+        return dict(w=jax.random.normal(key, (n_in, n_out)) * jnp.sqrt(2.0 / n_in),
+                    b=jnp.zeros((n_out,)))
+
+    return dict(l1=dense(k1, in_dim, h1), l2=dense(k2, h1, h2),
+                head=dense(k3, h2, N_TARGETS))
+
+
+def predict(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [..., in_dim] -> [..., 3] log1p-space (power, perf, area)."""
+    h = jax.nn.gelu(x @ params["l1"]["w"] + params["l1"]["b"])
+    h = jax.nn.gelu(h @ params["l2"]["w"] + params["l2"]["b"])
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def targets_from_metrics(metrics: jnp.ndarray) -> jnp.ndarray:
+    """Extract (power, perf, area) in log1p space from a metrics batch."""
+    cols = jnp.stack([metrics[..., M_IDX[n]] for n in TARGET_NAMES], axis=-1)
+    return jnp.log1p(jnp.maximum(cols, 0.0))
+
+
+def loss_fn(params: Dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    pred = predict(params, x)
+    return jnp.mean(jnp.sum(TARGET_WEIGHTS * (pred - y) ** 2, axis=-1))  # Eq. 65
+
+
+@jax.jit
+def train_step(params: Dict, opt_state: Dict, x: jnp.ndarray, y: jnp.ndarray,
+               lr: float = 1.5e-4) -> Tuple[Dict, Dict, jnp.ndarray]:
+    """One Adam step on the surrogate loss (half the critic LR, §3.16)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    m = jax.tree.map(lambda mu, g: 0.9 * mu + 0.1 * g, opt_state["m"], grads)
+    v = jax.tree.map(lambda nu, g: 0.999 * nu + 0.001 * g * g, opt_state["v"], grads)
+    t = opt_state["t"] + 1
+    mhat = jax.tree.map(lambda mu: mu / (1 - 0.9 ** t), m)
+    vhat = jax.tree.map(lambda nu: nu / (1 - 0.999 ** t), v)
+    params = jax.tree.map(lambda p, mu, nu: p - lr * mu / (jnp.sqrt(nu) + 1e-8),
+                          params, mhat, vhat)
+    return params, dict(m=m, v=v, t=t), loss
+
+
+def init_opt(params: Dict) -> Dict:
+    z = jax.tree.map(jnp.zeros_like, params)
+    return dict(m=z, v=jax.tree.map(jnp.zeros_like, params), t=jnp.zeros(()))
+
+
+@dataclasses.dataclass
+class Surrogate:
+    """Stateful convenience wrapper with the Eq. 66-67 uncertainty gate."""
+    params: Dict
+    opt_state: Dict
+    tau_sur: float = TAU_SUR_DEFAULT
+    resid_var: float = float("inf")   # sigma_psi^2, running (Eq. 66)
+    n_updates: int = 0
+
+    @classmethod
+    def create(cls, in_dim: int, seed: int = 0, tau_sur: float = TAU_SUR_DEFAULT
+               ) -> "Surrogate":
+        p = init_params(jax.random.PRNGKey(seed), in_dim)
+        return cls(params=p, opt_state=init_opt(p), tau_sur=tau_sur)
+
+    def update(self, x: np.ndarray, metrics: np.ndarray) -> float:
+        y = targets_from_metrics(jnp.asarray(metrics))
+        self.params, self.opt_state, loss = train_step(
+            self.params, self.opt_state, jnp.asarray(x), y)
+        loss = float(loss)
+        # running residual variance (Eq. 66), EMA over batches
+        var = loss / N_TARGETS
+        self.resid_var = var if self.resid_var == float("inf") else (
+            0.95 * self.resid_var + 0.05 * var)
+        self.n_updates += 1
+        return loss
+
+    @property
+    def accepted(self) -> bool:
+        """Eq. 67: 1[sigma^2 < tau_sur]."""
+        return self.resid_var < self.tau_sur
+
+    def __call__(self, x: np.ndarray) -> np.ndarray:
+        """Predict (power_mw, perf_gops, area_mm2) in linear space."""
+        return np.asarray(jnp.expm1(predict(self.params, jnp.asarray(x))))
+
+
+def surrogate_reward(pred_log: jnp.ndarray) -> jnp.ndarray:
+    """r_sur = P_perf - 0.3 P_pwr - 0.2 P_area (paper §3.16 MPC reward),
+    on log1p-scaled heads for stability."""
+    return pred_log[..., 1] - 0.3 * pred_log[..., 0] - 0.2 * pred_log[..., 2]

@@ -1,0 +1,83 @@
+"""Operation-level partitioning (§3.5) + heterogeneous derivation (§3.3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.hetero import derive
+from repro.core.partition import partition
+from repro.ppa import config_space as cs
+from repro.workload.extract import extract
+
+WL = extract(get_config("llama3.1-8b"), seq_len=2048, batch=3)
+
+
+def _cfg(mesh=12, rho=0.5):
+    cfg = cs.default_config()
+    cfg[cs.IDX["mesh_w"]] = mesh
+    cfg[cs.IDX["mesh_h"]] = mesh
+    cfg[cs.IDX["rho_matmul"]] = rho
+    return cfg
+
+
+def test_partition_conserves_flops():
+    cfg = _cfg()
+    part = partition(WL.graph, cfg)
+    assert part.n_tiles == 144
+    np.testing.assert_allclose(part.flops_load.sum(),
+                               WL.graph.flops.sum(), rtol=1e-6)
+    np.testing.assert_allclose(part.wmem_bytes.sum(),
+                               WL.graph.weight_bytes.sum(), rtol=1e-6)
+
+
+def test_partition_rho_spreads_load():
+    narrow = partition(WL.graph, _cfg(rho=0.05))
+    wide = partition(WL.graph, _cfg(rho=0.9))
+    # higher rho_matmul -> more tiles engaged -> lower max load
+    assert (wide.flops_load > 0).sum() >= (narrow.flops_load > 0).sum()
+    assert wide.flops_load.max() < narrow.flops_load.max()
+
+
+def test_partition_stats_bounded():
+    part = partition(WL.graph, _cfg())
+    s = part.stats
+    assert s.shape == (8,)
+    assert np.all(np.isfinite(s))
+    assert 0.0 <= s[2] <= 1.0     # balance score
+    assert 0.0 <= s[3] <= 1.0     # gini
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(4, 20), st.floats(0.1, 0.9))
+def test_hetero_respects_table7_bounds(mesh, spread):
+    cfg = _cfg(mesh)
+    part = partition(WL.graph, cfg)
+    h = derive(cfg, part, spreads=np.full(4, spread, np.float32),
+               weight_bytes_total=WL.f("weight_mb") * 1e6)
+    assert h.fetch.min() >= 1 and h.fetch.max() <= 16
+    assert h.vlen.min() >= 128 and h.vlen.max() <= 2048
+    assert h.dmem_kb.min() >= 16 and h.dmem_kb.max() <= 512
+    assert h.imem_kb.min() >= 1 and h.imem_kb.max() <= 128
+    assert len(h.fetch) == mesh * mesh
+
+
+def test_hetero_wmem_covers_weights():
+    """Eq. 14 at tile granularity: allocated WMEM >= placed weights."""
+    cfg = _cfg(16)
+    cfg[cs.IDX["wmem_kb"]] = 16384
+    part = partition(WL.graph, cfg)
+    h = derive(cfg, part, weight_bytes_total=WL.f("weight_mb") * 1e6)
+    assert h.wmem_kb.sum() * 1024 >= WL.f("weight_mb") * 1e6 * 0.95
+
+
+def test_hetero_heterogeneity_and_regions():
+    cfg = _cfg(16)
+    part = partition(WL.graph, cfg)
+    h = derive(cfg, part, spreads=np.array([0.9, 0.9, 0.9, 0.9], np.float32),
+               weight_bytes_total=WL.f("weight_mb") * 1e6)
+    s = h.summary()
+    assert s["VLEN"]["unique"] >= 2      # paper: heterogeneous per-tile
+    assert s["FETCH_SIZE"]["unique"] >= 2
+    regions = h.region_summary()
+    assert set(regions) == {"edge", "inner", "center"}
+    assert 0.0 <= h.gini_wmem() <= 1.0

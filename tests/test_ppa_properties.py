@@ -1,0 +1,100 @@
+"""Property-based tests (hypothesis) on the analytic PPA invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.ppa import config_space as cs
+from repro.ppa.analytic import M_IDX, evaluate_jit, node_vector
+from repro.ppa.nodes import NODES, node_params
+from repro.workload.extract import extract
+
+WL = extract(get_config("llama3.1-8b"), seq_len=2048, batch=3)
+WLV = jnp.asarray(WL.features)
+NODEV = {n: jnp.asarray(node_vector(node_params(n))) for n in NODES}
+
+
+def eval_cfg(cfg, node=3):
+    return np.asarray(evaluate_jit(jnp.asarray(cfg, jnp.float32), WLV,
+                                   NODEV[node]))
+
+
+cfg_strategy = st.builds(
+    lambda seed: cs.random_config(np.random.default_rng(seed)),
+    st.integers(0, 10_000))
+
+
+@settings(max_examples=60, deadline=None)
+@given(cfg_strategy, st.sampled_from(list(NODES)))
+def test_metrics_finite_and_nonnegative(cfg, node):
+    m = eval_cfg(cfg, node)
+    assert np.all(np.isfinite(m))
+    for k in ("power_mw", "perf_gops", "area_mm2", "tok_s", "n_cores"):
+        assert m[M_IDX[k]] >= 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(cfg_strategy, st.sampled_from(list(NODES)))
+def test_throughput_is_min_of_ceilings(cfg, node):
+    m = eval_cfg(cfg, node)
+    ceil = min(m[M_IDX["tok_comp"]], m[M_IDX["tok_mem"]], m[M_IDX["tok_noc"]])
+    assert m[M_IDX["tok_s"]] <= ceil * (1 + 1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(cfg_strategy)
+def test_power_decomposition_sums(cfg):
+    m = eval_cfg(cfg)
+    parts = sum(m[M_IDX[k]] for k in
+                ("p_compute_mw", "p_sram_mw", "p_rom_mw", "p_noc_mw",
+                 "p_leak_mw"))
+    assert abs(parts - m[M_IDX["power_mw"]]) <= 1e-3 * max(parts, 1.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(cfg_strategy)
+def test_projection_idempotent(cfg):
+    p1 = np.asarray(cs.project(jnp.asarray(cfg)))
+    p2 = np.asarray(cs.project(jnp.asarray(p1)))
+    np.testing.assert_allclose(p1, p2, atol=1e-5)
+    assert np.all(p1 >= cs.LO - 1e-5) and np.all(p1 <= cs.HI + 1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(cfg_strategy)
+def test_bigger_mesh_no_less_compute_ceiling(cfg):
+    """Compute capacity grows with mesh (eta_par < 1 but capacity net-up
+    for a doubling within bounds)."""
+    cfg = np.asarray(cs.project(jnp.asarray(cfg)))
+    small = cfg.copy()
+    small[cs.IDX["mesh_w"]] = 8
+    small[cs.IDX["mesh_h"]] = 8
+    big = cfg.copy()
+    big[cs.IDX["mesh_w"]] = 32
+    big[cs.IDX["mesh_h"]] = 32
+    assert (eval_cfg(big)[M_IDX["tok_comp"]]
+            > eval_cfg(small)[M_IDX["tok_comp"]])
+
+
+@settings(max_examples=30, deadline=None)
+@given(cfg_strategy)
+def test_kv_compaction_shrinks_cache(cfg):
+    """Eq. 32: INT8+window strictly reduces KV footprint vs FP16 full."""
+    cfg = np.asarray(cs.project(jnp.asarray(cfg)))
+    a = cfg.copy(); a[cs.IDX["kv_quant"]] = 0; a[cs.IDX["kv_window_frac"]] = 1.0
+    b = cfg.copy(); b[cs.IDX["kv_quant"]] = 1; b[cs.IDX["kv_window_frac"]] = 0.5
+    ma, mb = eval_cfg(a), eval_cfg(b)
+    assert mb[M_IDX["kv_total_mb"]] < ma[M_IDX["kv_total_mb"]]
+    assert mb[M_IDX["kappa_compact"]] >= 4.0 - 1e-3
+
+
+@settings(max_examples=25, deadline=None)
+@given(cfg_strategy, st.sampled_from([5, 14, 28]))
+def test_lower_freq_lower_dynamic_power(cfg, node):
+    cfg = np.asarray(cs.project(jnp.asarray(cfg)))
+    hi = cfg.copy(); hi[cs.IDX["freq_frac"]] = 1.0
+    lo = cfg.copy(); lo[cs.IDX["freq_frac"]] = 0.05
+    mh, ml = eval_cfg(hi, node), eval_cfg(lo, node)
+    dyn_h = mh[M_IDX["power_mw"]] - mh[M_IDX["p_leak_mw"]]
+    dyn_l = ml[M_IDX["power_mw"]] - ml[M_IDX["p_leak_mw"]]
+    assert dyn_l <= dyn_h + 1e-6

@@ -1,0 +1,182 @@
+"""SAC / PER / world-model / MPC / reward / pareto unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import actions as act
+from repro.core import mpc as mpc_mod
+from repro.core import networks as nets
+from repro.core import sac as sac_mod
+from repro.core import world_model as wm_mod
+from repro.core.exploration import EpsilonSchedule
+from repro.core.pareto import ArchiveEntry, ParetoArchive
+from repro.core.replay import PERBuffer
+from repro.core.reward import RewardModel, adaptive_weights
+from repro.core.state import (DROPPED_IDX, KEPT_IDX, SAC_STATE_DIM,
+                              STATE_DIM, sac_state)
+from repro.ppa import surrogate as sur_mod
+
+
+def test_state_subset_dims():
+    assert len(KEPT_IDX) == SAC_STATE_DIM == 52
+    assert STATE_DIM == 73
+    assert len(set(DROPPED_IDX.tolist()) | set(KEPT_IDX.tolist())) == 73
+    s = np.arange(73, dtype=np.float32)
+    sub = sac_state(s)
+    assert sub.shape == (52,)
+
+
+def test_actor_output_shapes():
+    p = nets.actor_init(jax.random.PRNGKey(0))
+    s = jnp.zeros((7, SAC_STATE_DIM))
+    disc, mu, log_std, gate = nets.actor_forward(p, s)
+    assert disc.shape == (7, 4, 5)        # 20 discrete logits
+    assert mu.shape == (7, 30)            # 30 means
+    assert log_std.shape == (7, 30)       # 30 log-stds -> 80-dim output
+    assert gate.shape == (7, nets.N_EXPERTS)
+    assert jnp.all(log_std >= nets.LOG_STD_MIN)
+    assert jnp.all(log_std <= nets.LOG_STD_MAX)
+    np.testing.assert_allclose(np.asarray(gate.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_sample_actions_bounds():
+    p = nets.actor_init(jax.random.PRNGKey(0))
+    s = jax.random.normal(jax.random.PRNGKey(1), (32, SAC_STATE_DIM))
+    a, a_d, logp_c, logp_d, gate, _ = nets.sample_actions(
+        p, s, jax.random.PRNGKey(2))
+    assert jnp.all(jnp.abs(a) <= 1.0)
+    assert a_d.shape == (32, 4) and int(a_d.max()) < 5
+    assert np.all(np.isfinite(np.asarray(logp_c)))
+
+
+def test_sac_update_improves_q_toward_reward():
+    state = sac_mod.create(0)
+    rng = np.random.default_rng(0)
+    B = 256
+    batch = sac_mod.Batch(
+        s=jnp.asarray(rng.normal(0, 1, (B, SAC_STATE_DIM)), jnp.float32),
+        a_cont=jnp.asarray(rng.uniform(-1, 1, (B, 30)), jnp.float32),
+        a_disc=jnp.asarray(rng.integers(0, 5, (B, 4)), jnp.int32),
+        r=jnp.ones((B,)),
+        s2=jnp.asarray(rng.normal(0, 1, (B, SAC_STATE_DIM)), jnp.float32),
+        done=jnp.ones((B,)),   # terminal: target = r = 1
+        is_w=jnp.ones((B,)))
+    key = jax.random.PRNGKey(0)
+    first_q = None
+    for i in range(60):
+        state, td, met = sac_mod.update(state, batch, jax.random.fold_in(key, i))
+        if first_q is None:
+            first_err = float(jnp.mean(jnp.abs(td)))
+            first_q = True
+    last_err = float(jnp.mean(jnp.abs(td)))
+    assert last_err < first_err  # critics fit the constant-1 reward
+    assert np.isfinite(float(met["alpha"]))
+
+
+def test_per_buffer_prioritisation():
+    buf = PERBuffer(4, 3, 2, capacity=64, seed=0)
+    for i in range(64):
+        buf.add(np.full(4, i, np.float32), np.zeros(3), np.zeros(2),
+                float(i), np.zeros(4), 0.0)
+    idx_all = np.arange(64)
+    pr = np.ones(64); pr[7] = 100.0
+    buf.update_priorities(idx_all, pr)
+    counts = np.zeros(64)
+    for _ in range(200):
+        batch, idx = buf.sample(16)
+        for i in idx:
+            counts[i] += 1
+    assert counts[7] > counts.mean() * 3  # high-priority oversampled
+    assert 0.4 <= buf.beta <= 1.0
+
+
+def test_world_model_learns_linear_dynamics():
+    wm = wm_mod.create(0)
+    rng = np.random.default_rng(0)
+    A = rng.normal(0, 0.05, (SAC_STATE_DIM + 30, SAC_STATE_DIM))
+    losses = []
+    for i in range(400):
+        s = rng.normal(0, 1, (128, SAC_STATE_DIM)).astype(np.float32)
+        a = rng.uniform(-1, 1, (128, 30)).astype(np.float32)
+        s2 = s + np.concatenate([s, a], -1) @ A
+        wm, loss = wm_mod.train_step(wm, jnp.asarray(s), jnp.asarray(a),
+                                     jnp.asarray(s2.astype(np.float32)))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.75
+    assert wm_mod.trained(wm, min_updates=50, max_loss=losses[0] * 10)
+
+
+def test_mpc_plan_shape_and_blend():
+    actor = nets.actor_init(jax.random.PRNGKey(0))
+    wm = nets.world_model_init(jax.random.PRNGKey(1))
+    sur = sur_mod.init_params(jax.random.PRNGKey(2), SAC_STATE_DIM + 30)
+    s = jnp.zeros((SAC_STATE_DIM,))
+    a = mpc_mod.plan(actor, wm, sur, s, jax.random.PRNGKey(3), k=8, horizon=3)
+    assert a.shape == (30,)
+    assert jnp.all(jnp.abs(a) <= 1.0)
+    a_sac = jnp.ones((30,)) * 0.5
+    blended = mpc_mod.refine(a_sac, a)
+    # only TCC dims change
+    np.testing.assert_allclose(np.asarray(blended[mpc_mod.TCC_ACTION_DIMS:]),
+                               0.5)
+
+
+def test_reward_components_and_range():
+    from repro.ppa.analytic import M_IDX, M_DIM
+    rm = RewardModel(power_budget_mw=1000.0, area_budget_mm2=100.0)
+    m = np.zeros(M_DIM, np.float32)
+    m[M_IDX["perf_gops"]] = 500.0
+    m[M_IDX["power_mw"]] = 2000.0   # over budget -> cubic penalty
+    m[M_IDX["area_mm2"]] = 50.0
+    m[M_IDX["feasible"]] = 0.0
+    m[M_IDX["hazard"]] = 0.5
+    r, parts = rm(m)
+    assert -5.0 <= r <= 3.0
+    assert parts["p_viol"] > 0
+    m[M_IDX["power_mw"]] = 500.0
+    m[M_IDX["feasible"]] = 1.0
+    r2, parts2 = rm(m)
+    assert parts2["b_feas"] > 1.0  # feasibility bonus with power margin
+    assert r2 > r
+
+
+def test_adaptive_weights_eq42_44():
+    a, b, g = adaptive_weights(0.4, 0.4, 0.2)
+    np.testing.assert_allclose([a, b, g], [0.4, 0.4, 0.2])
+    a, b, g = adaptive_weights(2, 2, 1)
+    np.testing.assert_allclose(a + b + g, 1.0)
+
+
+def test_epsilon_schedule_eq9():
+    es = EpsilonSchedule(0.5, 0.1, budget=1000)
+    e_feasible = es.step(found_feasible=True)
+    es2 = EpsilonSchedule(0.5, 0.1, budget=1000)
+    e_stuck = es2.step(found_feasible=False)
+    assert e_stuck > e_feasible           # slower decay when stuck
+    for _ in range(2000):
+        es.step(True)
+    assert abs(es.eps - 0.1) < 1e-9       # floors at eps_min
+
+
+def test_pareto_archive_nondominated():
+    ar = ParetoArchive()
+    e1 = ArchiveEntry(np.zeros(30), 100.0, 1000.0, 50.0, 10.0, 0.5, 0)
+    e2 = ArchiveEntry(np.zeros(30), 50.0, 2000.0, 60.0, 20.0, 0.4, 1)
+    e3 = ArchiveEntry(np.zeros(30), 40.0, 400.0, 80.0, 5.0, 0.9, 2)   # cheapest power
+    dom = ArchiveEntry(np.zeros(30), 150.0, 900.0, 55.0, 9.0, 0.6, 3)  # dominated by e1
+    assert ar.insert(e1) and ar.insert(e2) and ar.insert(e3)
+    assert not ar.insert(dom)
+    assert len(ar) == 3
+    sel = ar.select(0.4, 0.4, 0.2)
+    assert sel is not None
+
+
+def test_apply_action_respects_bounds():
+    from repro.ppa import config_space as cs
+    cfg = cs.default_config()
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        a_c, a_d = act.random_action(rng)
+        cfg = act.apply_action(cfg, a_c, a_d)
+    assert np.all(cfg >= cs.LO - 1e-4) and np.all(cfg <= cs.HI + 1e-4)

@@ -1,0 +1,52 @@
+"""End-to-end DSE behaviour: short SAC runs discover feasible configs and
+improve; baselines run; artifacts emit."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.search import SearchConfig, run_random, run_sac
+from repro.ppa.analytic import M_IDX
+from repro.workload.extract import extract
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return extract(get_config("llama3.1-8b"), seq_len=2048, batch=3)
+
+
+@pytest.mark.slow
+def test_sac_short_run_finds_feasible(wl):
+    res = run_sac(wl, 3, high_perf=True,
+                  search=SearchConfig(episodes=250, warmup=120,
+                                      update_every=4, reset_period=100,
+                                      seed=0))
+    assert res.episodes_run == 250
+    assert res.feasible_count > 0
+    assert res.best_cfg is not None
+    assert np.isfinite(res.best_score)
+    assert len(res.archive) > 0
+    assert res.hetero is not None
+    # trace is monotone non-increasing in best score
+    scores = [t.best_score for t in res.trace if np.isfinite(t.best_score)]
+    assert all(a >= b - 1e-9 for a, b in zip(scores, scores[1:]))
+
+
+def test_random_search_runs(wl):
+    res = run_random(wl, 3, episodes=150, seed=0)
+    assert res.feasible_count >= 0
+    assert res.unique_configs > 100
+
+
+def test_env_step_contract(wl):
+    from repro.core import actions as act
+    from repro.core.env import DSEEnv
+    env = DSEEnv(wl, 7, high_perf=True, seed=1)
+    s = env.reset()
+    assert s.shape == (52,)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        a_c, a_d = act.random_action(rng)
+        s, r, info = env.step(a_c, a_d)
+        assert s.shape == (52,)
+        assert np.isfinite(r)
+        assert info.metrics[M_IDX["n_cores"]] >= 4
