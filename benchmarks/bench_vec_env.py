@@ -1,0 +1,93 @@
+"""Benchmark: batched VecDSEEnv vs the scalar DSEEnv step loop.
+
+Measures env-steps/second of
+  * the scalar reference loop (one host-side ``DSEEnv.step`` per episode,
+    exactly what ``run_sac`` drives),
+  * ``VecDSEEnv`` in its fused analytic mode (B env-steps per jit dispatch),
+  * ``VecDSEEnv`` in exact-partition parity mode (host placement retained),
+and prints `name,us_per_call,derived` CSV rows plus the headline speedup.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_vec_env
+Knobs: REPRO_BENCH_VEC_B (default 256), REPRO_BENCH_VEC_STEPS (default 40).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, workload
+from repro.core import actions as act
+from repro.core.env import DSEEnv, VecDSEEnv
+
+B = int(os.environ.get("REPRO_BENCH_VEC_B", "256"))
+VEC_STEPS = int(os.environ.get("REPRO_BENCH_VEC_STEPS", "40"))
+SCALAR_STEPS = int(os.environ.get("REPRO_BENCH_SCALAR_STEPS", "40"))
+NODE_NM = 3
+
+
+def bench_scalar(wl, n_steps: int = SCALAR_STEPS) -> float:
+    env = DSEEnv(wl, NODE_NM, seed=0)
+    env.reset()
+    rng = np.random.default_rng(0)
+    a = [act.random_action(rng) for _ in range(n_steps)]
+    env.step(*act.random_action(rng))          # warm the jit evaluator
+    t0 = time.time()
+    for a_c, a_d in a:
+        env.step(a_c, a_d)
+    return n_steps / (time.time() - t0)
+
+
+def bench_vec(wl, mode: str, batch: int = B, n_steps: int = VEC_STEPS
+              ) -> float:
+    env = VecDSEEnv(wl, NODE_NM, batch=batch, seed=0, partition_mode=mode)
+    env.reset()
+    rng = np.random.default_rng(0)
+    acts = [act.random_action_batch(rng, batch) for _ in range(n_steps)]
+    env.step(*acts[0])                         # compile warmup
+    t0 = time.time()
+    for a_c, a_d in acts:
+        env.step(a_c, a_d)
+    return n_steps * batch / (time.time() - t0)
+
+
+def bench_rows():
+    wl = workload("llama3.1-8b")
+    scalar_sps = bench_scalar(wl)
+    vec_sps = bench_vec(wl, "analytic")
+    # exact mode keeps the host partitioner: fewer steps, smaller batch
+    vec_exact_sps = bench_vec(wl, "exact", batch=min(B, 64),
+                              n_steps=min(VEC_STEPS, 10))
+    speedup = vec_sps / scalar_sps
+    rows = [
+        ("env_scalar_step", 1e6 / scalar_sps, f"{scalar_sps:.1f} steps/s"),
+        ("env_vec_step_analytic_b%d" % B, 1e6 / vec_sps,
+         f"{vec_sps:.1f} env-steps/s"),
+        ("env_vec_step_exact", 1e6 / vec_exact_sps,
+         f"{vec_exact_sps:.1f} env-steps/s"),
+        ("env_vec_speedup", 0.0, f"{speedup:.1f}x"),
+    ]
+    out_dir = os.environ.get("REPRO_BENCH_OUT", "experiments/tables")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "bench_vec_env.json"), "w") as f:
+        json.dump({"batch": B, "scalar_steps_per_s": scalar_sps,
+                   "vec_analytic_steps_per_s": vec_sps,
+                   "vec_exact_steps_per_s": vec_exact_sps,
+                   "speedup": speedup}, f, indent=1)
+    return rows
+
+
+def main() -> None:
+    print(f"# vec-env benchmark (B={B}, steps={VEC_STEPS})")
+    print("name,us_per_call,derived")
+    rows = bench_rows()
+    emit(rows)
+    speedup = float(rows[-1][2][:-1])
+    print(f"# speedup {speedup:.1f}x "
+          f"({'PASS' if speedup >= 10.0 else 'FAIL'}: target >= 10x)")
+
+
+if __name__ == "__main__":
+    main()

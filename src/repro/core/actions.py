@@ -51,6 +51,42 @@ def apply_action(cfg: np.ndarray, a_cont: np.ndarray, a_disc: np.ndarray
     return np.asarray(cs.project(jnp.asarray(new)))
 
 
+def cont_delta(a_cont: np.ndarray) -> np.ndarray:
+    """Host-side continuous design deltas: (B, 30) actions -> (B, 26).
+
+    Deliberately numpy, NOT part of the fused jit step: XLA's CPU backend
+    contracts ``a * scale + cfg`` into an FMA (one rounding), while the
+    scalar reference env rounds the product first.  A 1-ulp drift on the
+    rho/lb fields can flip the quantized partition-cache key, so the
+    batched engine computes the product with the exact same numpy op as
+    ``apply_action`` and ships the delta to the device add.
+    """
+    return np.asarray(a_cont[:, :26], np.float32) * CONT_SCALE
+
+
+def apply_action_vec(cfg, delta_cont, a_disc):
+    """Batched jnp twin of :func:`apply_action` for the fused vec step.
+
+    cfg: (B, 30) float32; delta_cont: (B, 26) from :func:`cont_delta`;
+    a_disc: (B, 4) int32 category ids in [0,5).  Element-wise (bitwise)
+    identical to the scalar path: additions and the projection carry no
+    mul+add pairs for the compiler to contract.
+    """
+    import jax.numpy as jnp
+    new = cfg.at[:, _CONT_FIELD_SLICE].add(delta_cont)
+    deltas = jnp.asarray(DISC_DELTAS)[a_disc]                    # (B, 4)
+    new = new.at[:, jnp.asarray(np.array(_DISC_FIELDS))].add(deltas)
+    return cs.project(new)
+
+
+def random_action_batch(rng: np.random.Generator, batch: int
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Batch of uniform exploration actions (vectorized random_action)."""
+    a_c = rng.uniform(-1.0, 1.0, size=(batch, N_CONT)).astype(np.float32)
+    a_d = rng.integers(0, N_DISC_OPTIONS, size=(batch, N_DISC)).astype(np.int32)
+    return a_c, a_d
+
+
 def hetero_spreads(a_cont: np.ndarray) -> np.ndarray:
     """Map action dims 26-29 from [-1,1] to spread factors in [0,1]."""
     return (np.asarray(a_cont[26:30], np.float32) + 1.0) / 2.0

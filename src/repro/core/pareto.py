@@ -9,7 +9,7 @@ configuration is Pareto-optimal among everything explored.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -26,6 +26,19 @@ class ArchiveEntry:
 
     def objectives(self) -> np.ndarray:
         return np.array([self.power_mw, -self.perf_gops, self.area_mm2])
+
+    @classmethod
+    def from_metrics(cls, cfg: np.ndarray, metrics: np.ndarray,
+                     episode: int) -> "ArchiveEntry":
+        """Build an entry from an analytic-PPA metrics vector."""
+        from repro.ppa.analytic import M_IDX
+        return cls(cfg=np.array(cfg, copy=True),
+                   power_mw=float(metrics[M_IDX["power_mw"]]),
+                   perf_gops=float(metrics[M_IDX["perf_gops"]]),
+                   area_mm2=float(metrics[M_IDX["area_mm2"]]),
+                   tok_s=float(metrics[M_IDX["tok_s"]]),
+                   ppa_score=float(metrics[M_IDX["ppa_score"]]),
+                   episode=episode)
 
 
 def _dominates(a: np.ndarray, b: np.ndarray) -> bool:
@@ -59,6 +72,28 @@ class ParetoArchive:
             keep.pop(int(np.argmin(d.min(1))))
         self.entries = keep
         return True
+
+    def insert_batch(self, entries: Sequence[ArchiveEntry]) -> int:
+        """Insert B entries at once; returns how many reached the frontier.
+
+        Pre-filters the batch to its own non-dominated subset with one
+        vectorized pairwise pass (O(B^2) numpy instead of O(B) frontier
+        scans for entries a batch-mate already dominates), then runs the
+        usual per-entry frontier update.  The resulting archive equals
+        sequential insertion (up to crowd-pruning order at max_size).
+        """
+        if not entries:
+            return 0
+        objs = np.stack([e.objectives() for e in entries])
+        le = np.all(objs[:, None, :] <= objs[None, :, :], axis=-1)
+        lt = np.any(objs[:, None, :] < objs[None, :, :], axis=-1)
+        dominated = (le & lt).any(axis=0)
+        self.n_inserted += int(dominated.sum())
+        inserted = 0
+        for e, dom in zip(entries, dominated):
+            if not dom:
+                inserted += int(self.insert(e))
+        return inserted
 
     def select(self, w_perf: float = 0.4, w_power: float = 0.4,
                w_area: float = 0.2) -> Optional[ArchiveEntry]:

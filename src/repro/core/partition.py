@@ -57,6 +57,48 @@ def _stats(load: np.ndarray) -> np.ndarray:
                      float(np.clip(n.min(), 0, 1))], np.float32)
 
 
+def stats_vec(cfg, wl):
+    """Closed-form jnp proxy of the load-distribution stats, batched.
+
+    The host placement loop above is irregular (per-op argpartition over a
+    mutable load map) and cannot live inside the fused vectorized env step;
+    this is its analytic stand-in for the batched engine's observation
+    encoding (``VecDSEEnv(partition_mode="analytic")``).  Model: partitioned
+    ops cover a ``c`` fraction of tiles (flop-share-weighted Eq. 10-13
+    ratios), so the normalized per-tile load is ~1/c on covered tiles; the
+    load-balance weight ``lb_alpha`` pushes residual ops onto idle tiles,
+    lifting the minimum and damping variance/gini.  Only the 8 Table-2
+    load-distribution state features consume this — PPA metrics, reward and
+    feasibility never do, which is what the parity suite pins down.
+
+    cfg: (B, 30); wl: (30,) -> (B, 8) float32 in the `_stats` layout.
+    """
+    import jax.numpy as jnp
+
+    from repro.workload.features import WL_IDX
+    n_tiles = (jnp.round(cfg[:, cs.IDX["mesh_w"]])
+               * jnp.round(cfg[:, cs.IDX["mesh_h"]]))
+    rho = lambda name: jnp.clip(
+        cs.RHO_BASE + cfg[:, cs.IDX[name]] - 0.3, 0.0, 1.0)      # Eq. 10-13
+    mm = wl[WL_IDX["matmul_ratio"]]
+    cv = wl[WL_IDX["conv_ratio"]]
+    gen = jnp.maximum(1.0 - mm - cv, 0.0)
+    c = jnp.clip(mm * rho("rho_matmul") + cv * rho("rho_conv")
+                 + gen * rho("rho_general"), 1.0 / n_tiles, 1.0)
+    lb = cfg[:, cs.IDX["lb_alpha"]]
+    n_min = jnp.clip(lb * (1.0 - c), 0.0, 1.0)
+    n_max = jnp.maximum((1.0 / c) * (1.0 - 0.3 * lb), 1.0)
+    var = (1.0 - c) / c * (1.0 - 0.5 * lb)
+    n_std = jnp.sqrt(jnp.maximum(var, 0.0))
+    ratio = jnp.minimum(n_max / jnp.maximum(n_min, 1e-2), 100.0)
+    balance = jnp.clip(c * (1.0 + 0.3 * lb), 0.0, 1.0)
+    gini = jnp.clip((1.0 - c) * (1.0 - 0.5 * lb), 0.0, 1.0)
+    return jnp.stack([
+        jnp.clip(var, 0.0, 10.0) / 10.0, ratio, balance, gini,
+        jnp.full_like(c, 0.5), jnp.clip(n_std, 0.0, 2.0) / 2.0,
+        jnp.clip(n_max, 0.0, 4.0) / 4.0, n_min], axis=-1).astype(jnp.float32)
+
+
 def partition(graph: WorkloadGraph, cfg: np.ndarray, seed: int = 0
               ) -> PartitionResult:
     """Partition + place the operator graph on the configured mesh."""

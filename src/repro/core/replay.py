@@ -49,6 +49,25 @@ class SumTree:
     def get(self, idx: int) -> float:
         return float(self.tree[idx + self.capacity])
 
+    def set_many(self, idx: np.ndarray, values: np.ndarray) -> None:
+        """Vectorized multi-leaf set: write all leaves, then rebuild the
+        affected ancestors bottom-up (O(B log N) numpy, no python per-leaf
+        loop).
+
+        For non-power-of-two capacities the leaves straddle two tree levels,
+        so an update band can contain both a node and its parent; the parent
+        then reads the child's pre-band value.  Iterating until the band set
+        is empty (each node's k-th ancestor lands in band k) guarantees every
+        node's LAST recompute sees fully updated children."""
+        i = np.asarray(idx, np.int64) + self.capacity
+        self.tree[i] = values
+        i = np.unique(i // 2)
+        i = i[i >= 1]
+        while i.size:
+            self.tree[i] = self.tree[2 * i] + self.tree[2 * i + 1]
+            i = np.unique(i // 2)
+            i = i[i >= 1]
+
 
 class PERBuffer:
     def __init__(self, state_dim: int, cont_dim: int, disc_dim: int,
@@ -79,6 +98,21 @@ class PERBuffer:
         self.pos = (self.pos + 1) % self.capacity
         self.size = min(self.size + 1, self.capacity)
 
+    def add_batch(self, s, a_cont, a_disc, r, s2, done) -> None:
+        """Insert B transitions in one shot (vectorized DSE engine path).
+        Equivalent to B sequential ``add`` calls."""
+        n = len(r)
+        idx = (self.pos + np.arange(n)) % self.capacity
+        self.s[idx] = s
+        self.a_cont[idx] = a_cont
+        self.a_disc[idx] = a_disc
+        self.r[idx] = r
+        self.s2[idx] = s2
+        self.done[idx] = done
+        self.tree.set_many(idx, self.max_priority ** ALPHA_PER)
+        self.pos = int((self.pos + n) % self.capacity)
+        self.size = min(self.size + n, self.capacity)
+
     def sample(self, batch: int) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
         """Stochastic prioritized sampling; returns (batch dict, indices)."""
         total = self.tree.total()
@@ -98,8 +132,7 @@ class PERBuffer:
     def update_priorities(self, idx: np.ndarray, td_abs: np.ndarray) -> None:
         pr = (np.abs(td_abs) + EPS_P) ** ALPHA_PER
         self.max_priority = max(self.max_priority, float(pr.max(initial=0.0)))
-        for i, p in zip(idx, pr):
-            self.tree.set(int(i), float(p))
+        self.tree.set_many(np.asarray(idx, np.int64), pr)
 
     def recent(self, n: int) -> Dict[str, np.ndarray]:
         """Most recent n transitions (world-model training, §3.16)."""

@@ -13,9 +13,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.ppa.analytic import M_IDX
+from repro.ppa.analytic import M_IDX, NODE_IDX
 
 S_MAG = 1.0          # score magnitude (Table 4: feasibility bonus in [0,2])
 LAMBDA_MEM = 2e-3    # per-MB memory overuse penalty (Eq. 40)
@@ -85,3 +86,73 @@ class RewardModel:
         return r, dict(p_norm=p_norm, p_power=p_power, a_norm=a_norm,
                        b_feas=b_feas, p_viol=p_viol, p_mem=p_mem,
                        p_haz=p_haz, reward=r)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized (pure-jnp) reward path for the batched DSE engine.
+#
+# The adaptive running ranges become an explicit (B, 6) state array
+#   [perf_lo, perf_hi, power_lo, power_hi, area_lo, area_hi]
+# threaded through the fused jit step; per-node budgets come from the node
+# constant vector, so one compiled step serves every process node.
+
+RANGE_DIM = 6
+
+
+def init_ranges(node: jnp.ndarray) -> jnp.ndarray:
+    """Seed (B, 6) running ranges from node budgets (paper §3.10 note).
+
+    node: (B, NODE_DIM) stack of ``repro.ppa.analytic.node_vector`` rows.
+    """
+    b = node.shape[0]
+    z = jnp.zeros((b,), jnp.float32)
+    return jnp.stack([
+        z, jnp.ones((b,), jnp.float32),
+        z, node[:, NODE_IDX["power_budget_mw"]],
+        z, node[:, NODE_IDX["area_budget_mm2"]],
+    ], axis=-1)
+
+
+def reward_step(metrics: jnp.ndarray, ranges: jnp.ndarray, node: jnp.ndarray,
+                weights: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Eq. 34 over a batch: metrics (B, M_DIM), ranges (B, 6),
+    node (B, NODE_DIM), weights (B, 3) normalized (alpha, beta, gamma).
+
+    Returns (reward (B,), new_ranges (B, 6), parts dict of (B,) arrays);
+    element-wise identical (to float32 precision) to ``RewardModel.__call__``.
+    """
+    m = lambda n: metrics[:, M_IDX[n]]
+    perf, power, area = m("perf_gops"), m("power_mw"), m("area_mm2")
+    pb = node[:, NODE_IDX["power_budget_mw"]]
+
+    perf_lo = jnp.minimum(ranges[:, 0], perf)
+    perf_hi = jnp.maximum(ranges[:, 1], perf)
+    power_lo = jnp.minimum(ranges[:, 2], power)
+    power_hi = jnp.maximum(ranges[:, 3], power)
+    area_lo = jnp.minimum(ranges[:, 4], area)
+    area_hi = jnp.maximum(ranges[:, 5], area)
+    new_ranges = jnp.stack([perf_lo, perf_hi, power_lo, power_hi,
+                            area_lo, area_hi], axis=-1)
+
+    norm = lambda x, lo, hi: (x - lo) / jnp.maximum(hi - lo, 1e-9)
+    p_norm = norm(perf, perf_lo, perf_hi)                            # Eq. 35
+    p_power = norm(power, power_lo, power_hi)                        # Eq. 36
+    a_norm = norm(area, area_lo, area_hi)                            # Eq. 37
+
+    feasible = m("feasible") > 0.5
+    m_pwr = (pb - power) / pb
+    b_feas = jnp.where(feasible,
+                       S_MAG * (1.0 + jnp.maximum(m_pwr, 0.0)), 0.0)  # Eq. 38
+    v = jnp.maximum(0.0, (power - pb) / pb)
+    p_viol = S_MAG * (1.0 + v) * v ** 2                              # Eq. 39
+    p_mem = LAMBDA_MEM * jnp.maximum(0.0, m("mem_overuse_mb"))       # Eq. 40
+    p_haz = LAMBDA_HAZARD * m("hazard")                              # Eq. 41
+
+    r = (weights[:, 0] * p_norm - weights[:, 1] * p_power
+         - weights[:, 2] * a_norm + b_feas - p_viol - p_mem - p_haz)  # Eq. 34
+    r = jnp.clip(r, -5.0, 3.0)
+    parts = dict(p_norm=p_norm, p_power=p_power, a_norm=a_norm,
+                 b_feas=b_feas, p_viol=p_viol, p_mem=p_mem, p_haz=p_haz,
+                 reward=r)
+    return r, new_ranges, parts

@@ -163,6 +163,14 @@ def policy_act(actor_params: Dict, s: jnp.ndarray, key: jax.Array):
 
 
 @jax.jit
+def policy_act_batch(actor_params: Dict, s: jnp.ndarray, key: jax.Array):
+    """Sample actions for a (B, 52) batch of env states in one dispatch —
+    the act path of the vectorized DSE engine (VecDSEEnv)."""
+    a, a_d, _, _, _, _ = nets.sample_actions(actor_params, s, key)
+    return a, a_d
+
+
+@jax.jit
 def policy_mean(actor_params: Dict, s: jnp.ndarray):
     """Deterministic (mean) action — used by MPC candidate generation."""
     disc_logits, mu, _, _ = nets.actor_forward(actor_params, s[None])

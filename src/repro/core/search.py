@@ -19,10 +19,11 @@ from repro.core import actions as act
 from repro.core import mpc as mpc_mod
 from repro.core import sac as sac_mod
 from repro.core import world_model as wm_mod
-from repro.core.env import DSEEnv
+from repro.core.env import DSEEnv, VecDSEEnv
 from repro.core.exploration import EpsilonSchedule
 from repro.core.hetero import HeteroConfig, derive
 from repro.core.pareto import ArchiveEntry, ParetoArchive
+from repro.core.partition import partition
 from repro.core.replay import PERBuffer
 from repro.core.state import SAC_STATE_DIM
 from repro.ppa import config_space as cs
@@ -46,6 +47,10 @@ class SearchConfig:
     wm_batch: int = 256
     surrogate_every: int = 8
     verbose: bool = False
+    # vectorized engine (run_search): SAC updates per batched env dispatch.
+    # The scalar loop updates once per env-step; one dispatch advances
+    # n_envs env-steps, so this trades update density for env throughput.
+    updates_per_dispatch: int = 4
 
 
 @dataclasses.dataclass
@@ -212,6 +217,184 @@ def run_sac(workload: Workload, node_nm: int, *, high_perf: bool = True,
         archive=archive, trace=trace, hetero=hetero, episodes_run=t + 1,
         feasible_count=feasible_count, unique_configs=len(seen),
         wall_s=time.time() - t0)
+
+
+# --------------------------------------------------------------------------
+# Vectorized engine: B environments per device dispatch (VecDSEEnv)
+# --------------------------------------------------------------------------
+
+_plan_batch = jax.jit(jax.vmap(mpc_mod.plan,
+                               in_axes=(None, None, None, 0, 0)))
+
+
+def run_search(workload: Workload, node_nm: int, *, high_perf: bool = True,
+               search: Optional[SearchConfig] = None, n_envs: int = 64
+               ) -> SearchResult:
+    """Algorithm 1 on the batched engine: ``n_envs`` parallel episodes per
+    device dispatch.
+
+    The env hot path (action application, projection, analytic PPA, Eq.-34
+    reward) is one fused jit step over the whole batch; transitions land in
+    the PER buffer via one ``add_batch`` and feasible configurations reach
+    the Pareto archive via one ``insert_batch`` per dispatch.  SAC/world-
+    model updates run ``sc.updates_per_dispatch`` times per dispatch (the
+    scalar loop updates per env-step; see SearchConfig).  ``sc.episodes``
+    is the TOTAL env-step budget, matching the scalar driver.
+    """
+    sc = search or SearchConfig()
+    b = n_envs
+    t0 = time.time()
+    env = VecDSEEnv(workload, node_nm, batch=b, high_perf=high_perf,
+                    seed=sc.seed)
+    rng = np.random.default_rng(sc.seed)
+    key = jax.random.PRNGKey(sc.seed)
+
+    sac_state = sac_mod.create(sc.seed)
+    wm_state = wm_mod.create(sc.seed + 1)
+    surrogate = sur_mod.Surrogate.create(SAC_STATE_DIM + act.N_CONT,
+                                         seed=sc.seed + 2)
+    buf = PERBuffer(SAC_STATE_DIM, act.N_CONT, act.N_DISC, seed=sc.seed)
+    eps_sched = EpsilonSchedule(sc.eps0, sc.eps_min, sc.episodes)
+    archive = ParetoArchive()
+    trace: List[TracePoint] = []
+    seen: set = set()
+    best = (np.inf, None, None)
+    feasible_count = 0
+    last_entropy = 0.0
+    no_improve = 0
+    sur_x: List[np.ndarray] = []
+    sur_y: List[np.ndarray] = []
+
+    s = env.reset()                                   # (B, 52)
+    n_steps = max(1, sc.episodes // b)
+    # reset_period bounds the per-env trajectory length, exactly as in the
+    # scalar loop (B episodes advance in parallel, not one sliced B ways)
+    reset_every = max(1, sc.reset_period)
+    trace_every = max(1, 50 // b)
+    t_env = 0
+    for t in range(n_steps):
+        key, k_act, k_upd, k_mpc = jax.random.split(key, 4)
+        # ---- action selection: per-element eps-greedy (Alg. 1 l.6) -------
+        a_c_rand, a_d_rand = act.random_action_batch(rng, b)
+        a_c_pol, a_d_pol = sac_mod.policy_act_batch(
+            sac_state.params.actor, jnp.asarray(s), k_act)
+        a_c_pol, a_d_pol = np.asarray(a_c_pol), np.asarray(a_d_pol)
+        if (eps_sched.eps < sc.mpc_eps_gate and surrogate.accepted
+                and wm_mod.trained(wm_state)):
+            a_mpc = np.asarray(_plan_batch(
+                sac_state.params.actor, wm_state.params, surrogate.params,
+                jnp.asarray(s), jax.random.split(k_mpc, b)))
+            blend = (mpc_mod.BLEND_MPC * a_mpc
+                     + (1.0 - mpc_mod.BLEND_MPC) * a_c_pol)
+            a_c_pol[:, :mpc_mod.TCC_ACTION_DIMS] = \
+                blend[:, :mpc_mod.TCC_ACTION_DIMS]
+        explore = rng.random(b) < eps_sched.eps
+        a_c = np.where(explore[:, None], a_c_rand, a_c_pol).astype(np.float32)
+        a_d = np.where(explore[:, None], a_d_rand, a_d_pol).astype(np.int32)
+        # ---- env transition: one fused dispatch for B env-steps ----------
+        s2, r, info = env.step(a_c, a_d)
+        buf.add_batch(s, a_c, a_d, r, s2, np.zeros(b, np.float32))
+        sur_x.append(np.concatenate([s, a_c], axis=1).astype(np.float32))
+        sur_y.append(info.metrics.astype(np.float32))
+        # ---- best tracking + batched Pareto insert (Alg. 1 l.15) ---------
+        prev_best_score = best[0]
+        feas_idx = np.nonzero(info.feasible)[0]
+        archive.insert_batch([
+            ArchiveEntry.from_metrics(info.cfg[i], info.metrics[i],
+                                      episode=t_env + int(i))
+            for i in feas_idx])
+        scores = info.metrics[:, M_IDX["ppa_score"]]
+        if feas_idx.size:
+            j = int(feas_idx[np.argmin(scores[feas_idx])])
+            if float(scores[j]) < best[0]:
+                best = (float(scores[j]), info.cfg[j].copy(),
+                        info.metrics[j].copy())
+        feasible_count += int(info.feasible.sum())
+        for i in range(b):
+            seen.add(_cfg_key(info.cfg[i]))
+        t_env += b
+        no_improve = 0 if best[0] < prev_best_score else no_improve + b
+        # ---- learn (Alg. 1 l.12-13) --------------------------------------
+        if buf.size >= max(sc.batch_size, min(sc.warmup, sc.episodes // 4)):
+            for _ in range(sc.updates_per_dispatch):
+                batch_np, idx = buf.sample(sc.batch_size)
+                batch = sac_mod.Batch(**{k: jnp.asarray(v)
+                                         for k, v in batch_np.items()})
+                key, k_upd = jax.random.split(key)
+                sac_state, td_abs, met = sac_mod.update(sac_state, batch,
+                                                        k_upd)
+                buf.update_priorities(idx, np.asarray(td_abs))
+                last_entropy = float(met["entropy"])
+            wmb = buf.recent(sc.wm_batch)
+            wm_state, _ = wm_mod.train_step(
+                wm_state, jnp.asarray(wmb["s"]), jnp.asarray(wmb["a_cont"]),
+                jnp.asarray(wmb["s2"]))
+            if t % max(1, sc.surrogate_every // b) == 0 and len(sur_x) >= 1:
+                xs = np.concatenate(sur_x[-4:], axis=0)
+                ys = np.concatenate(sur_y[-4:], axis=0)
+                pick = rng.integers(0, len(xs), size=min(256, len(xs)))
+                surrogate.update(xs[pick], ys[pick])
+                if len(sur_x) > 20_000 // b:   # bound host memory
+                    sur_x = sur_x[-10_000 // b:]
+                    sur_y = sur_y[-10_000 // b:]
+        # ---- epsilon decay: B env-steps per dispatch (Eq. 9) -------------
+        found = feasible_count > 0
+        for _ in range(b):
+            eps_sched.step(found_feasible=found)
+        if t % trace_every == 0 or t == n_steps - 1:
+            trace.append(TracePoint(
+                episode=t_env, reward=float(np.mean(r)),
+                best_score=float(best[0]), eps=eps_sched.eps,
+                entropy=last_entropy, unique_configs=len(seen),
+                feasible_count=feasible_count,
+                tok_s=float(np.mean(info.metrics[:, M_IDX["tok_s"]]))))
+            if sc.verbose:
+                print(f"  step {t:5d} (ep {t_env}) r={float(np.mean(r)):+.3f} "
+                      f"best={best[0]:.4f} eps={eps_sched.eps:.3f} "
+                      f"feas={feasible_count}")
+        if t % reset_every == reset_every - 1:
+            s = env.reset()
+        else:
+            s = s2
+        if (no_improve > sc.early_stop_patience
+                and eps_sched.eps <= sc.eps_min + 1e-6):
+            break
+
+    # ---- final selection: Pareto-scalarized (paper §3.10) ----------------
+    sel = archive.select(env.w_perf, env.w_power, env.w_area)
+    best_cfg = sel.cfg if sel is not None else best[1]
+    best_metrics = (env.evaluate_configs(best_cfg[None])[0]
+                    if best_cfg is not None else None)
+    hetero = None
+    if best_cfg is not None:
+        part = partition(workload.graph, best_cfg)
+        hetero = derive(best_cfg, part,
+                        weight_bytes_total=workload.f("weight_mb") * 1e6)
+    return SearchResult(
+        method="sac-vec", node_nm=node_nm, best_cfg=best_cfg,
+        best_metrics=best_metrics,
+        best_score=(float(best_metrics[M_IDX["ppa_score"]])
+                    if best_metrics is not None else float("inf")),
+        archive=archive, trace=trace, hetero=hetero, episodes_run=t_env,
+        feasible_count=feasible_count, unique_configs=len(seen),
+        wall_s=time.time() - t0)
+
+
+def search_all_nodes(workload: Workload, nodes: Sequence[int], *,
+                     high_perf: bool = True,
+                     search: Optional[SearchConfig] = None,
+                     n_envs: int = 64) -> Dict[int, SearchResult]:
+    """Algorithm 1 outer loop on the batched engine (Eq. 50).
+
+    Because the fused step traces the node constant vector instead of baking
+    it in, the 7 per-node searches share ONE compiled step (and one compiled
+    evaluator/encoder): only the first node pays compilation.
+    """
+    out = {}
+    for n in nodes:
+        out[n] = run_search(workload, n, high_perf=high_perf, search=search,
+                            n_envs=n_envs)
+    return out
 
 
 # --------------------------------------------------------------------------

@@ -149,3 +149,82 @@ def encode(wl: np.ndarray, cfg: np.ndarray, metrics: np.ndarray,
 def sac_state(s73: np.ndarray) -> np.ndarray:
     """Gather the 52-dim optimized subset used by the SAC actor/critics."""
     return np.asarray(s73)[..., KEPT_IDX]
+
+
+def encode_vec(wl, cfg, metrics, node, part_stats):
+    """Batched pure-jnp mirror of :func:`encode` (Table 2, 73 dims).
+
+    wl: (30,) shared workload features; cfg: (B, 30); metrics: (B, M_DIM);
+    node: (B, NODE_DIM); part_stats: (B, 8).  Returns (B, 73) float32.
+    Keep the two encoders in lockstep — ``tests/test_vec_env.py`` asserts
+    element-wise parity against the scalar path.
+    """
+    import jax.numpy as jnp
+
+    b = cfg.shape[0]
+    w = lambda n: jnp.broadcast_to(wl[WL_IDX[n]], (b,))
+    c = lambda n: cfg[:, cs.IDX[n]]
+    m = lambda n: metrics[:, M_IDX[n]]
+    nd = lambda n: node[:, NODE_IDX[n]]
+    ps = lambda i: part_stats[:, i]
+    one = jnp.ones((b,), jnp.float32)
+
+    hz = m("hazard")
+    cols = [
+        # -- Workload (0-4) ------------------------------------------------
+        jnp.log1p(w("instr_count")) / 25.0,
+        w("ilp"), w("mem_intensity"), w("vector_util"), w("matmul_ratio"),
+        # -- Configuration (5-25) ------------------------------------------
+        c("mesh_w") / 64.0, c("mesh_h") / 64.0,
+        c("sc_x") / 8.0, c("sc_y") / 8.0,
+        c("fetch") / 16.0, c("stanum") / 32.0, c("vlen") / 2048.0,
+        c("dmem_kb") / 512.0, jnp.log1p(c("wmem_kb")) / 12.0,
+        c("imem_kb") / 128.0, c("vr_wp") / 16.0, c("xr_wp") / 16.0,
+        c("xdpnum") / 16.0, nd("node_nm") / 28.0,
+        m("noc_latency_cyc") / 100.0, c("dflit") / 8192.0,
+        c("vdpnum") / 16.0, c("freq_frac"), c("precision"),
+        nd("f_max_hz") / 1e9, nd("a_scale"),
+        # -- Partitioning (26-28) ------------------------------------------
+        c("dmem_in_frac"), c("dmem_out_frac"),
+        jnp.maximum(0.0, 1.0 - c("dmem_in_frac") - c("dmem_out_frac")),
+        # -- Load distribution (29-32) -------------------------------------
+        ps(0), jnp.minimum(ps(1) / 10.0, 1.0), ps(2), ps(7),
+        # -- Op partition (33-36) ------------------------------------------
+        c("rho_matmul"), c("rho_conv"), c("rho_general"), c("sub_matmul"),
+        # -- Hazards (37-40) -----------------------------------------------
+        hz * 0.6, hz * 0.25, hz * 0.15, hz,
+        # -- Per-TCC hazards (41-44) ---------------------------------------
+        hz * ps(2), jnp.minimum(hz * ps(1) / 4.0, 1.0), ps(5), ps(6),
+        # -- Frequency (45) ------------------------------------------------
+        c("freq_frac"),
+        # -- Streaming (46-49) ---------------------------------------------
+        c("stream_in"), c("stream_out"), c("allreduce_frac"), 0.5 * one,
+        # -- PPA observation (50-54) ---------------------------------------
+        jnp.minimum(m("power_mw") / jnp.maximum(nd("power_budget_mw"), 1e-9),
+                    2.0),
+        jnp.minimum(m("perf_gops") / 1e6, 2.0),
+        jnp.minimum(m("area_mm2") / jnp.maximum(nd("area_budget_mm2"), 1e-9),
+                    2.0),
+        jnp.log1p(jnp.maximum(m("tok_s"), 0.0)) / 12.0,
+        jnp.minimum(m("perf_gops") / jnp.maximum(m("power_mw"), 1e-6) / 20.0,
+                    2.0),
+        # -- Workload partition (55-58) ------------------------------------
+        ps(4), ps(5), ps(6), ps(3),
+        # -- Precision distribution (59-64) --------------------------------
+        w("prec_fp32"), w("prec_fp16"), w("prec_bf16"),
+        w("prec_fp8"), w("prec_int8"), w("prec_mixed"),
+        # -- Instruction type (65-66) --------------------------------------
+        w("vector_ratio"), w("scalar_ratio"),
+        # -- SC topology (67-69) -------------------------------------------
+        m("n_cores") / 4096.0, m("hbar") / 43.0,
+        m("noc_latency_cyc") / 100.0,
+        # -- LLM config (70-72) --------------------------------------------
+        w("batch") / 64.0, c("kv_quant") / 2.0,
+        1.0 / jnp.maximum(m("kappa_compact"), 1.0),
+    ]
+    return jnp.stack(cols, axis=-1).astype(jnp.float32)
+
+
+def sac_state_vec(s73):
+    """jnp version of :func:`sac_state` for the batched engine."""
+    return s73[..., KEPT_IDX]

@@ -1,3 +1,18 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared jax-version compatibility shims for the Pallas kernels."""
+from __future__ import annotations
+
+
+def tpu_compiler_params(**kwargs):
+    """Build TPU compiler params across jax versions.
+
+    jax >= 0.5 exposes ``pltpu.CompilerParams``; jax 0.4.x calls the same
+    dataclass ``pltpu.TPUCompilerParams``.  Field names are identical.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

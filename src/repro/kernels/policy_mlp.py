@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 DEFAULT_BLOCK_B = 256
 
 
@@ -64,7 +66,7 @@ def fused_mlp_pallas(x: jnp.ndarray, w1, b1, w2, b2, w3, b3, *,
         ],
         out_specs=pl.BlockSpec((block_b, d_out), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Bp, d_out), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, w1, b1, w2, b2, w3, b3)

@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.search import (SearchConfig, SearchResult, run_grid,
-                               run_random, run_sac)
+                               run_random, run_sac, run_search)
 from repro.ppa.analytic import M_IDX
 from repro.ppa.nodes import NODES
 from repro.workload.extract import extract
@@ -46,8 +46,8 @@ def result_row(res: SearchResult) -> Dict:
 
 def run(arch: str, *, nodes: List[int], mode: str, episodes: int,
         method: str, out_dir: str, seed: int = 0, seq_len: int = 2048,
-        batch: int = 3, update_every: int = 1, verbose: bool = False
-        ) -> List[Dict]:
+        batch: int = 3, update_every: int = 1, verbose: bool = False,
+        engine: str = "scalar", n_envs: int = 64) -> List[Dict]:
     cfg = get_config(arch)
     high_perf = mode == "high-performance"
     wl = extract(cfg, seq_len=seq_len, batch=batch)
@@ -57,7 +57,11 @@ def run(arch: str, *, nodes: List[int], mode: str, episodes: int,
         if method == "sac":
             sc = SearchConfig(episodes=episodes, seed=seed,
                               update_every=update_every, verbose=verbose)
-            res = run_sac(wl, node, high_perf=high_perf, search=sc)
+            if engine == "vec":
+                res = run_search(wl, node, high_perf=high_perf, search=sc,
+                                 n_envs=n_envs)
+            else:
+                res = run_sac(wl, node, high_perf=high_perf, search=sc)
         elif method == "random":
             res = run_random(wl, node, high_perf=high_perf,
                              episodes=episodes, seed=seed)
@@ -100,13 +104,19 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=2048)
     ap.add_argument("--batch", type=int, default=3)
     ap.add_argument("--update-every", type=int, default=1)
+    ap.add_argument("--engine", default="scalar", choices=["scalar", "vec"],
+                    help="'vec' runs the batched VecDSEEnv engine: n-envs "
+                         "parallel episodes per jit dispatch")
+    ap.add_argument("--n-envs", type=int, default=64,
+                    help="environments per dispatch for --engine vec")
     ap.add_argument("--verbose", action="store_true")
     a = ap.parse_args()
     nodes = list(NODES) if a.nodes == "all" else [
         int(x) for x in a.nodes.split(",")]
     run(a.arch, nodes=nodes, mode=a.mode, episodes=a.episodes,
         method=a.method, out_dir=a.out, seed=a.seed, seq_len=a.seq_len,
-        batch=a.batch, update_every=a.update_every, verbose=a.verbose)
+        batch=a.batch, update_every=a.update_every, verbose=a.verbose,
+        engine=a.engine, n_envs=a.n_envs)
 
 
 if __name__ == "__main__":

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_reduced
-from repro.launch.mesh import make_test_mesh
+from repro.launch.mesh import make_test_mesh, mesh_context
 from repro.models import layers as L
 from repro.models import lm
 from repro.models.blocks import KV_TAIL
@@ -27,7 +27,7 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
     cfg = get_reduced(arch) if reduced else get_config(arch)
     mesh = mesh or make_test_mesh()
     key = jax.random.PRNGKey(seed)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         params = lm.init_params(key, cfg)
         cache_len = prompt_len + gen_tokens
         prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab)

@@ -253,6 +253,18 @@ def evaluate_jit(cfg, wl, node):
 
 evaluate_batch = jax.jit(jax.vmap(evaluate, in_axes=(0, None, None)))
 
+# Batched over (cfg, node) pairs: one compiled evaluator serves every process
+# node in the same dispatch (node constants are traced, not baked in) — the
+# evaluation path of the vectorized DSE engine (repro.core.env.VecDSEEnv).
+evaluate_vec = jax.vmap(evaluate, in_axes=(0, None, 0))
+evaluate_vec_jit = jax.jit(evaluate_vec)
+
+
+def node_matrix(nodes, *, high_perf: bool = True) -> np.ndarray:
+    """Stack per-element node constant vectors: nodes is a sequence of
+    ``NodeParams`` -> (B, NODE_DIM) float32."""
+    return np.stack([node_vector(p, high_perf=high_perf) for p in nodes])
+
 
 def metrics_dict(m: jnp.ndarray) -> Dict[str, float]:
     arr = np.asarray(m, np.float64)

@@ -11,7 +11,11 @@ from repro.models import layers as L
 from repro.models import lm
 from repro.optim.trainer import TrainConfig, create_state, make_train_step
 
-ASSIGNED = [a for a in ARCH_IDS]
+# tier-1 runs a small dense + MoE representative pair; the full zoo rides in
+# the slow tier (same assertions, just heavier reduced configs)
+FAST_ARCHS = ("smollm-135m", "mixtral-8x7b")
+ASSIGNED = [a if a in FAST_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+            for a in ARCH_IDS]
 
 
 def _inputs(cfg, B=2, S=16, seed=0):

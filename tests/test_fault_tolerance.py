@@ -38,6 +38,7 @@ def test_checkpoint_retention_and_latest(tmp_path):
     assert ckpt.latest_step(str(tmp_path)) == 5
 
 
+@pytest.mark.slow
 def test_preemption_resume_bit_exact(tmp_path):
     """Train 6 steps straight vs 3 steps -> kill -> resume 3: identical."""
     from repro.launch.train import train

@@ -1,6 +1,10 @@
 """Operation-level partitioning (§3.5) + heterogeneous derivation (§3.3)."""
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config

@@ -50,6 +50,7 @@ def test_sample_actions_bounds():
     assert np.all(np.isfinite(np.asarray(logp_c)))
 
 
+@pytest.mark.slow
 def test_sac_update_improves_q_toward_reward():
     state = sac_mod.create(0)
     rng = np.random.default_rng(0)

@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs import get_reduced
 from repro.distributed import sharding as sh
-from repro.launch.mesh import make_test_mesh
+from repro.launch.mesh import make_test_mesh, mesh_context
 from repro.models import lm
 
 
@@ -45,8 +45,10 @@ def test_cache_specs(mesh):
     assert len(jax.tree.leaves(specs)) == len(jax.tree.leaves(caches))
 
 
-@pytest.mark.parametrize("arch", ["smollm-135m", "jamba-v0.1-52b",
-                                  "whisper-medium"])
+@pytest.mark.parametrize("arch", [
+    "smollm-135m",
+    pytest.param("jamba-v0.1-52b", marks=pytest.mark.slow),
+    pytest.param("whisper-medium", marks=pytest.mark.slow)])
 def test_mini_dryrun_compiles(arch, mesh):
     """lower+compile a reduced train step with the production builders'
     sharding rules on the CPU mesh."""
@@ -62,7 +64,7 @@ def test_mini_dryrun_compiles(arch, mesh):
         batch["ctx"] = jax.ShapeDtypeStruct(
             (4, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
     step = make_train_step(cfg, TrainConfig())
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jax.jit(step).lower(state_sds, batch)
         compiled = lowered.compile()
     assert compiled.cost_analysis() is not None

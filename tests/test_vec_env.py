@@ -1,0 +1,216 @@
+"""Parity + determinism suite for the batched DSE engine (VecDSEEnv).
+
+The scalar ``DSEEnv.step`` path is the reference oracle: the vectorized
+engine must reproduce its metrics/reward/feasibility element-wise over
+random action batches on multiple process nodes (tolerance <= 1e-5), and in
+exact-partition mode the full 73-dim observation as well.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import actions as act
+from repro.core import sac as sac_mod
+from repro.core.env import DSEEnv, VecDSEEnv
+from repro.core.pareto import ArchiveEntry, ParetoArchive
+from repro.core.replay import PERBuffer, SumTree
+from repro.core.state import SAC_STATE_DIM
+from repro.ppa.analytic import M_DIM
+from repro.workload.extract import extract
+
+NODES_MIX = [3, 3, 7, 7, 14, 14]   # >= 2 distinct process nodes
+B = len(NODES_MIX)
+N_STEPS = 30
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return extract(get_config("llama3.1-8b"), seq_len=2048, batch=3)
+
+
+def _rollout_actions(seed, steps, batch):
+    rng = np.random.default_rng(seed)
+    return [act.random_action_batch(rng, batch) for _ in range(steps)]
+
+
+@pytest.mark.parametrize("mode", ["exact", "analytic"])
+def test_vec_matches_scalar_elementwise(wl, mode):
+    """VecDSEEnv metrics/reward/feasibility == B scalar DSEEnvs, on a
+    mixed-node batch; in exact mode the observation matches too."""
+    vec = VecDSEEnv(wl, NODES_MIX, seed=0, partition_mode=mode)
+    scal = [DSEEnv(wl, NODES_MIX[i], seed=i) for i in range(B)]
+    s_vec = vec.reset()
+    s_scal = np.stack([e.reset() for e in scal])
+    assert s_vec.shape == (B, SAC_STATE_DIM)
+    if mode == "exact":
+        np.testing.assert_allclose(s_vec, s_scal, atol=ATOL)
+
+    for t, (a_c, a_d) in enumerate(_rollout_actions(42, N_STEPS, B)):
+        s2_vec, r_vec, info_vec = vec.step(a_c, a_d)
+        assert info_vec.metrics.shape == (B, M_DIM)
+        for i in range(B):
+            s2_s, r_s, info_s = scal[i].step(a_c[i], a_d[i])
+            # design vectors must track bitwise (recurrent state)
+            np.testing.assert_array_equal(info_vec.cfg[i], info_s.cfg,
+                                          err_msg=f"cfg t={t} i={i}")
+            np.testing.assert_allclose(
+                info_vec.metrics[i], info_s.metrics, rtol=RTOL, atol=ATOL,
+                err_msg=f"metrics t={t} i={i}")
+            assert abs(float(r_vec[i]) - r_s) <= ATOL, (t, i)
+            assert bool(info_vec.feasible[i]) == info_s.feasible, (t, i)
+            for k, v in info_s.reward_parts.items():
+                assert abs(float(info_vec.reward_parts[k][i]) - v) <= ATOL, \
+                    (t, i, k)
+            if mode == "exact":
+                np.testing.assert_allclose(
+                    s2_vec[i], s2_s, atol=ATOL, err_msg=f"obs t={t} i={i}")
+                np.testing.assert_allclose(
+                    info_vec.partition_stats[i], info_s.partition_stats,
+                    atol=ATOL)
+        # mid-rollout lockstep reset, as run_search performs
+        if t == N_STEPS // 2:
+            s_vec = vec.reset()
+            s_scal = np.stack([e.reset() for e in scal])
+            if mode == "exact":
+                np.testing.assert_allclose(s_vec, s_scal, atol=ATOL)
+
+
+def test_vec_deterministic_under_seed(wl):
+    """Same seed + same actions -> bit-identical trajectories; a different
+    seed diverges at reset."""
+    trajs = []
+    for _ in range(2):
+        env = VecDSEEnv(wl, 3, batch=4, seed=123)
+        obs = [env.reset()]
+        rews = []
+        for a_c, a_d in _rollout_actions(7, 10, 4):
+            s2, r, info = env.step(a_c, a_d)
+            obs.append(s2)
+            rews.append(r)
+        trajs.append((np.stack(obs), np.stack(rews),
+                      np.asarray(env.cfg).copy()))
+    np.testing.assert_array_equal(trajs[0][0], trajs[1][0])
+    np.testing.assert_array_equal(trajs[0][1], trajs[1][1])
+    np.testing.assert_array_equal(trajs[0][2], trajs[1][2])
+
+    other = VecDSEEnv(wl, 3, batch=4, seed=321)
+    assert np.abs(other.reset() - trajs[0][0][0]).max() > 0
+
+
+def test_vec_seed_matches_scalar_seed_layout(wl):
+    """VecDSEEnv(seed=s) element i == DSEEnv(seed=s+i) at reset."""
+    vec = VecDSEEnv(wl, 7, batch=3, seed=5, partition_mode="exact")
+    sv = vec.reset()
+    for i in range(3):
+        e = DSEEnv(wl, 7, seed=5 + i)
+        np.testing.assert_allclose(sv[i], e.reset(), atol=ATOL)
+
+
+def test_evaluate_configs_matches_scalar(wl):
+    env = VecDSEEnv(wl, 3, batch=4, seed=0)
+    scal = DSEEnv(wl, 3, seed=0)
+    rng = np.random.default_rng(0)
+    from repro.ppa import config_space as cs
+    cfgs = np.stack([cs.random_config(rng) for _ in range(4)])
+    m_vec = env.evaluate_configs(cfgs)
+    for i in range(4):
+        np.testing.assert_allclose(m_vec[i], scal.evaluate_config(cfgs[i]),
+                                   rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------- batched io
+def test_per_add_batch_equals_sequential():
+    d_s, d_c, d_d = 8, 3, 2
+    rng = np.random.default_rng(0)
+    n = 37
+    s = rng.normal(size=(n, d_s)).astype(np.float32)
+    a_c = rng.normal(size=(n, d_c)).astype(np.float32)
+    a_d = rng.integers(0, 5, size=(n, d_d)).astype(np.int32)
+    r = rng.normal(size=n).astype(np.float32)
+    s2 = rng.normal(size=(n, d_s)).astype(np.float32)
+    b1 = PERBuffer(d_s, d_c, d_d, capacity=64, seed=0)
+    b2 = PERBuffer(d_s, d_c, d_d, capacity=64, seed=0)
+    for i in range(n):
+        b1.add(s[i], a_c[i], a_d[i], r[i], s2[i], 0.0)
+    b2.add_batch(s, a_c, a_d, r, s2, np.zeros(n, np.float32))
+    assert b1.size == b2.size and b1.pos == b2.pos
+    np.testing.assert_array_equal(b1.s, b2.s)
+    np.testing.assert_array_equal(b1.r, b2.r)
+    np.testing.assert_allclose(b1.tree.tree, b2.tree.tree, rtol=1e-12)
+    batch1, idx1 = b1.sample(16)
+    batch2, idx2 = b2.sample(16)
+    np.testing.assert_array_equal(idx1, idx2)
+    np.testing.assert_array_equal(batch1["is_w"], batch2["is_w"])
+
+
+@pytest.mark.parametrize("capacity", [32, 37, 100_000])
+def test_sumtree_set_many_equals_sequential(capacity):
+    """Includes non-power-of-two capacities, where leaves straddle two tree
+    levels and a naive level-synchronous rebuild leaves the root stale."""
+    rng = np.random.default_rng(1)
+    t1, t2 = SumTree(capacity), SumTree(capacity)
+    idx = rng.integers(0, capacity, size=40)
+    vals = rng.random(40)
+    for i, v in zip(idx, vals):
+        t1.set(int(i), float(v))
+    t2.set_many(idx, vals)
+    np.testing.assert_allclose(t1.tree, t2.tree, rtol=1e-12)
+    assert abs(t1.total() - t2.total()) < 1e-12
+
+
+def test_sumtree_set_many_level_boundary():
+    """Regression: at CAPACITY=100_000, updating leaves on both sides of the
+    leaf-depth boundary must still produce the correct root prefix-sum."""
+    t = SumTree(100_000)
+    t.set_many(np.array([100, 40_000]), np.array([2.0, 3.0]))
+    assert abs(t.total() - 5.0) < 1e-12
+
+
+def test_pareto_insert_batch_equals_sequential():
+    rng = np.random.default_rng(2)
+
+    def entries(k):
+        return [ArchiveEntry(cfg=np.zeros(2), power_mw=float(rng.random()),
+                             perf_gops=float(rng.random()),
+                             area_mm2=float(rng.random()), tok_s=1.0,
+                             ppa_score=0.0, episode=i) for i in range(k)]
+
+    es = entries(50)
+    a1, a2 = ParetoArchive(), ParetoArchive()
+    for e in es:
+        a1.insert(e)
+    a2.insert_batch(es)
+    assert a1.n_inserted == a2.n_inserted == 50
+    f1, f2 = a1.frontier(), a2.frontier()
+    for k in f1:
+        np.testing.assert_allclose(np.sort(f1[k]), np.sort(f2[k]))
+
+
+def test_policy_act_batch_shapes():
+    import jax
+    state = sac_mod.create(0)
+    s = np.zeros((5, SAC_STATE_DIM), np.float32)
+    a_c, a_d = sac_mod.policy_act_batch(state.params.actor, s,
+                                        jax.random.PRNGKey(0))
+    assert a_c.shape == (5, act.N_CONT)
+    assert a_d.shape == (5, act.N_DISC)
+    assert np.all(np.abs(np.asarray(a_c)) <= 1.0)
+
+
+@pytest.mark.slow
+def test_run_search_vec_smoke(wl):
+    """The batched driver completes, archives, and returns coherent results
+    sharing one compiled step across nodes."""
+    from repro.core.search import SearchConfig, search_all_nodes
+    sc = SearchConfig(episodes=512, warmup=128, reset_period=64, seed=0)
+    out = search_all_nodes(wl, [3, 7], search=sc, n_envs=32)
+    for node, res in out.items():
+        assert res.method == "sac-vec"
+        assert res.node_nm == node
+        assert res.episodes_run == 512
+        assert len(res.trace) >= 2
+        assert res.unique_configs > 100
+        if res.best_cfg is not None:
+            assert np.isfinite(res.best_score)
