@@ -1,0 +1,109 @@
+"""Benchmark: campaign engine (mixed-node cell batches) vs sequential cells.
+
+Runs the same (workload, node, mode) grid twice at an identical total
+episode budget:
+
+  * **campaign** — ``repro.campaign.run_campaign``: cells packed into
+    mixed-node ``run_search_cells`` batches (one compiled step + one SAC/PER
+    learner per batch, persistence + reporting included in the timing), and
+  * **sequential** — the pre-campaign workflow: one single-cell
+    ``run_search_cells`` invocation per cell,
+
+and reports cells/hour for both plus the speedup (target >= 3x: the batch
+amortises SAC/world-model updates and host work over all cells of a
+dispatch).  Writes ``experiments/tables/bench_campaign.json``.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_campaign
+Knobs: REPRO_BENCH_CAMPAIGN_CELLS (default 6), .._EPISODES (default 1024),
+       .._LANES (default 8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+import time
+
+from repro.ppa.nodes import NODES
+
+N_CELLS = int(os.environ.get("REPRO_BENCH_CAMPAIGN_CELLS", "6"))
+EPISODES = int(os.environ.get("REPRO_BENCH_CAMPAIGN_EPISODES", "1024"))
+LANES = int(os.environ.get("REPRO_BENCH_CAMPAIGN_LANES", "8"))
+ARCH = os.environ.get("REPRO_BENCH_CAMPAIGN_ARCH", "llama3.1-8b")
+
+
+def _spec(name: str, episodes: int = EPISODES):
+    from repro.campaign import CampaignSpec
+    nodes = list(NODES)[:max(1, N_CELLS)]
+    return CampaignSpec(
+        name=name, workloads=[ARCH], nodes=nodes, modes=["high_perf"],
+        episodes=episodes, lanes=LANES, max_envs=max(64, N_CELLS * LANES),
+        seed=0, checkpoint_every=0)
+
+
+def bench_rows():
+    from repro.campaign.runner import run_campaign, run_cells_sequential
+
+    spec = _spec("bench")
+    n_cells = len(spec.nodes)
+    tmp = tempfile.mkdtemp(prefix="bench_campaign_")
+    try:
+        # jit warmup for BOTH engines: compile the mixed-node B = cells*lanes
+        # step and the single-cell B = lanes step (plus the shared SAC/world-
+        # model/surrogate update shapes) before timing, so the comparison is
+        # steady-state cells/hour rather than compile time.
+        warm = _spec("warm", episodes=max(2 * LANES, 512 // n_cells))
+        run_campaign(os.path.join(tmp, "warm"), warm,
+                     progress=lambda _m: None)
+        run_cells_sequential(dataclasses.replace(warm, nodes=warm.nodes[:1]))
+
+        t0 = time.time()
+        store = run_campaign(os.path.join(tmp, "bench"), spec,
+                             progress=lambda _m: None)
+        campaign_s = time.time() - t0
+        assert store.all_done(), "campaign did not complete"
+
+        t0 = time.time()
+        seq = run_cells_sequential(spec)
+        sequential_s = time.time() - t0
+        assert len(seq) == n_cells
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    cph_campaign = n_cells / (campaign_s / 3600.0)
+    cph_seq = n_cells / (sequential_s / 3600.0)
+    speedup = cph_campaign / cph_seq
+    out_dir = os.environ.get("REPRO_BENCH_OUT", "experiments/tables")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "bench_campaign.json"), "w") as f:
+        json.dump({"n_cells": n_cells, "episodes_per_cell": EPISODES,
+                   "lanes": LANES, "arch": ARCH,
+                   "campaign_s": campaign_s, "sequential_s": sequential_s,
+                   "cells_per_hour_campaign": cph_campaign,
+                   "cells_per_hour_sequential": cph_seq,
+                   "speedup": speedup}, f, indent=1)
+    return [
+        ("campaign_batched", 1e6 * campaign_s / (n_cells * EPISODES),
+         f"{cph_campaign:.1f} cells/h"),
+        ("campaign_sequential", 1e6 * sequential_s / (n_cells * EPISODES),
+         f"{cph_seq:.1f} cells/h"),
+        ("campaign_speedup", 0.0, f"{speedup:.1f}x"),
+    ]
+
+
+def main() -> None:
+    print(f"# campaign benchmark ({N_CELLS} cells x {EPISODES} ep, "
+          f"lanes={LANES})")
+    print("name,us_per_call,derived")
+    rows = bench_rows()
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+    speedup = float(rows[-1][2][:-1])
+    print(f"# speedup {speedup:.1f}x "
+          f"({'PASS' if speedup >= 3.0 else 'FAIL'}: target >= 3x)")
+
+
+if __name__ == "__main__":
+    main()

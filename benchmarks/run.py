@@ -12,7 +12,7 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import bench_vec_env, roofline, tables
+    from benchmarks import bench_campaign, bench_vec_env, roofline, tables
     from benchmarks.common import BENCH_EPISODES, emit
 
     print(f"# repro benchmarks (episodes/node={BENCH_EPISODES})")
@@ -30,6 +30,7 @@ def main() -> None:
         ("table21", tables.table21_search_comparison),
         ("roofline", roofline.bench_rows),
         ("vec_env", bench_vec_env.bench_rows),
+        ("campaign", bench_campaign.bench_rows),
     ]
     failures = 0
     t_start = time.time()

@@ -1,0 +1,41 @@
+"""Full config-zoo campaign at a small episode budget.
+
+Sweeps every workload in the zoo (all 13 architectures, paper §2 Table 1
+plus the paper's own Llama 3.1 8B / SmolVLM pair) across three process
+nodes in both optimization modes on the batched campaign engine, then
+prints the cross-node adaptation report — the paper's headline "one RL
+loop, no manual retuning" artifact, for the entire zoo in one invocation.
+
+Run:  PYTHONPATH=src python examples/zoo_campaign.py
+  (about 13 workloads x 3 nodes x 2 modes = 78 cells; budget via
+   ZOO_EPISODES, default 256/cell.  Kill it at any point and re-run with
+   RESUME=1 to continue from the last completed chunk.)
+"""
+import os
+
+from repro.campaign import CampaignSpec, run_campaign
+from repro.configs import ARCH_IDS
+
+EPISODES = int(os.environ.get("ZOO_EPISODES", "256"))
+ROOT = os.environ.get("ZOO_ROOT", "experiments/campaigns/zoo")
+
+
+def main() -> None:
+    if os.environ.get("RESUME") == "1":
+        store = run_campaign(ROOT, resume=True)
+    else:
+        spec = CampaignSpec(
+            name="zoo", workloads=list(ARCH_IDS), nodes=[3, 7, 14],
+            modes=["high_perf", "low_power"], episodes=EPISODES, lanes=8,
+            max_envs=64, seed=0, checkpoint_every=16)
+        print(f"[zoo] {spec.n_cells} cells "
+              f"({len(spec.workloads)} workloads x {len(spec.nodes)} nodes "
+              f"x {len(spec.modes)} modes), {EPISODES} episodes/cell")
+        store = run_campaign(ROOT, spec)
+    print(f"[zoo] reports under {os.path.join(store.root, 'report')}:")
+    with open(os.path.join(store.root, "report", "adaptation.md")) as f:
+        print(f.read())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Campaign subsystem: persistent multi-workload x multi-node DSE sweeps.
+
+Plans, executes, persists and reports full design-space-exploration
+campaigns over the grid (workload in the config zoo) x (process node) x
+(optimization mode), on top of the batched ``VecDSEEnv`` engine:
+
+* :mod:`repro.campaign.planner` — expands a grid spec into cells and packs
+  them into mixed-node ``VecDSEEnv`` batches (one compiled step per batch).
+* :mod:`repro.campaign.runner`  — drives ``run_search_cells`` per batch with
+  periodic checkpointing; a killed campaign resumes from the last completed
+  chunk with no lost completed cells.
+* :mod:`repro.campaign.store`   — JSONL run directory under
+  ``experiments/campaigns/<name>/`` with a manifest (git sha, seed, budget,
+  cell status) and dominance-filtered archive merging.
+* :mod:`repro.campaign.report`  — per-cell best-PPA tables and the
+  cross-node adaptation table (JSON + markdown).
+
+CLI: ``python -m repro.launch.dse --campaign grid.yaml`` /
+``--resume <run-dir>`` (see ROADMAP.md for the run-directory layout).
+"""
+from repro.campaign.planner import Cell, CellBatch, CampaignSpec, plan
+from repro.campaign.runner import run_campaign
+from repro.campaign.store import CampaignStore, merge_runs
+from repro.campaign.report import write_reports
+
+__all__ = ["Cell", "CellBatch", "CampaignSpec", "plan", "run_campaign",
+           "CampaignStore", "merge_runs", "write_reports"]

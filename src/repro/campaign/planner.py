@@ -1,0 +1,146 @@
+"""Campaign planner: grid spec -> cells -> mixed-node cell batches.
+
+A campaign cell is one (workload, process node, optimization mode) search.
+Cells sharing (workload, mode) are packed into mixed-node batches: node
+constants enter the compiled ``VecDSEEnv`` step as traced vectors, so every
+cell in a batch shares ONE compiled step and one SAC policy/PER buffer (see
+``repro.core.search.run_search_cells``) — the orchestration-level payoff of
+the PR-1 engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Sequence
+
+from repro.configs.base import ARCH_IDS
+from repro.ppa.nodes import NODES
+
+MODES = ("high_perf", "low_power")
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One (workload, node, mode) point of the campaign grid."""
+    arch: str
+    node_nm: int
+    mode: str                    # 'high_perf' | 'low_power'
+
+    @property
+    def cell_id(self) -> str:
+        return f"{self.arch}__{self.node_nm}nm__{self.mode}"
+
+    @property
+    def high_perf(self) -> bool:
+        return self.mode == "high_perf"
+
+
+@dataclasses.dataclass(frozen=True)
+class CellBatch:
+    """Cells that run as one mixed-node ``run_search_cells`` invocation.
+    All cells share (arch, mode); ``batch_id`` keys checkpoints."""
+    index: int
+    arch: str
+    mode: str
+    node_nms: tuple
+
+    @property
+    def batch_id(self) -> str:
+        nodes = "-".join(str(n) for n in self.node_nms)
+        return f"b{self.index:03d}__{self.arch}__{self.mode}__{nodes}nm"
+
+    @property
+    def cells(self) -> List[Cell]:
+        return [Cell(self.arch, n, self.mode) for n in self.node_nms]
+
+
+@dataclasses.dataclass
+class CampaignSpec:
+    """Grid + budget of one campaign (the ``--campaign grid.yaml`` payload).
+
+    ``episodes`` is the per-cell env-step budget; ``lanes`` the parallel
+    environments per cell; ``max_envs`` caps the total batch B =
+    n_cells_in_batch * lanes of one mixed-node dispatch.
+    """
+    name: str
+    workloads: List[str]
+    nodes: List[int] = dataclasses.field(default_factory=lambda: list(NODES))
+    modes: List[str] = dataclasses.field(default_factory=lambda: list(MODES))
+    episodes: int = 512
+    lanes: int = 8
+    max_envs: int = 64
+    seed: int = 0
+    seq_len: int = 2048
+    batch: int = 3               # decode batch fed to workload extraction
+    checkpoint_every: int = 8    # dispatches between search checkpoints
+
+    def __post_init__(self) -> None:
+        unknown = [w for w in self.workloads if w not in ARCH_IDS]
+        if unknown:
+            raise ValueError(f"unknown workloads {unknown}; "
+                             f"zoo: {sorted(ARCH_IDS)}")
+        bad = [n for n in self.nodes if n not in NODES]
+        if bad:
+            raise ValueError(f"unknown process nodes {bad}; known: {NODES}")
+        bad_modes = [m for m in self.modes if m not in MODES]
+        if bad_modes:
+            raise ValueError(f"unknown modes {bad_modes}; known: {MODES}")
+        if self.lanes < 1 or self.episodes < 1:
+            raise ValueError("episodes and lanes must be >= 1")
+        if self.max_envs < self.lanes:
+            raise ValueError(f"max_envs ({self.max_envs}) must be >= lanes "
+                             f"({self.lanes})")
+
+    @property
+    def n_cells(self) -> int:
+        return len(self.workloads) * len(self.nodes) * len(self.modes)
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "CampaignSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        extra = set(d) - known
+        if extra:
+            raise ValueError(f"unknown campaign spec keys {sorted(extra)}; "
+                             f"known: {sorted(known)}")
+        return cls(**d)
+
+    @classmethod
+    def from_file(cls, path: str) -> "CampaignSpec":
+        """Load a grid spec from .json or .yaml/.yml."""
+        with open(path) as f:
+            text = f.read()
+        if path.endswith((".yaml", ".yml")):
+            try:
+                import yaml
+            except ImportError as e:   # pragma: no cover
+                raise RuntimeError(
+                    f"{path}: pyyaml not installed; use a .json grid") from e
+            return cls.from_dict(yaml.safe_load(text))
+        return cls.from_dict(json.loads(text))
+
+
+def cells(spec: CampaignSpec) -> List[Cell]:
+    """Expand the grid: workloads (outer) x modes x nodes (inner)."""
+    return [Cell(w, n, m) for w in spec.workloads for m in spec.modes
+            for n in spec.nodes]
+
+
+def plan(spec: CampaignSpec) -> List[CellBatch]:
+    """Pack the grid into mixed-node batches of <= max_envs environments.
+
+    Grouping key is (workload, mode) — those fix the env's workload vector
+    and reward weights — and the node list is chunked so that
+    ``len(chunk) * lanes <= max_envs``.
+    """
+    per_batch = max(1, spec.max_envs // spec.lanes)
+    out: List[CellBatch] = []
+    for w in spec.workloads:
+        for m in spec.modes:
+            nodes: Sequence[int] = spec.nodes
+            for i in range(0, len(nodes), per_batch):
+                out.append(CellBatch(index=len(out), arch=w, mode=m,
+                                     node_nms=tuple(nodes[i:i + per_batch])))
+    return out

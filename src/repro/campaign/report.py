@@ -1,0 +1,90 @@
+"""Campaign reporting: per-cell best-PPA + cross-node adaptation tables.
+
+``write_reports`` renders two artifacts (each as JSON + markdown) under
+``<run-dir>/report/``:
+
+* ``cells``      — one best-PPA row per completed cell.
+* ``adaptation`` — the paper's Table-style cross-node artifact: for each
+  (workload, mode), how the chosen design adapts across process nodes
+  (mesh size, FETCH, VLEN, weight/data memory split, frequency, PPA) —
+  the headline "one RL loop retunes itself per node" evidence.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Sequence
+
+CELL_COLS = ("cell_id", "mesh", "fetch", "vlen", "wmem_kb", "dmem_kb",
+             "freq_mhz", "tok_s", "power_mw", "area_mm2", "ppa_score",
+             "episodes", "frontier", "wall_s")
+ADAPT_COLS = ("node_nm", "mesh", "fetch", "vlen", "wmem_kb", "dmem_kb",
+              "freq_mhz", "tok_s", "power_mw", "area_mm2", "ppa_score")
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return "-" if v is None else str(v)
+
+
+def markdown_table(rows: Sequence[Dict], cols: Sequence[str]) -> str:
+    lines = ["| " + " | ".join(cols) + " |",
+             "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows:
+        lines.append("| " + " | ".join(_fmt(r.get(c)) for c in cols) + " |")
+    return "\n".join(lines) + "\n"
+
+
+def cell_rows(store) -> List[Dict]:
+    """Per-cell best-PPA table, sorted by (arch, mode, node)."""
+    rows = list(store.summaries().values())
+    rows.sort(key=lambda r: (r.get("arch", ""), r.get("mode", ""),
+                             r.get("node_nm", 0)))
+    return rows
+
+
+def adaptation_tables(store) -> Dict[str, List[Dict]]:
+    """Cross-node adaptation: {"<arch>__<mode>": [per-node rows]}.
+
+    Each row is the converged design for one process node — reading down a
+    column (mesh, FETCH, VLEN, memory split) shows how the single RL loop
+    retunes the architecture across nodes without manual intervention."""
+    out: Dict[str, List[Dict]] = {}
+    for row in cell_rows(store):
+        key = f"{row.get('arch')}__{row.get('mode')}"
+        out.setdefault(key, []).append(
+            {c: row.get(c) for c in ADAPT_COLS})
+    for rows in out.values():
+        rows.sort(key=lambda r: r["node_nm"] or 0)
+    return out
+
+
+def write_reports(store, out_dir: Optional[str] = None) -> Dict[str, str]:
+    """Emit cells + adaptation tables as JSON and markdown; returns paths."""
+    out_dir = out_dir or os.path.join(store.root, "report")
+    os.makedirs(out_dir, exist_ok=True)
+    paths = {}
+
+    rows = cell_rows(store)
+    paths["cells_json"] = os.path.join(out_dir, "cells.json")
+    with open(paths["cells_json"], "w") as f:
+        json.dump(rows, f, indent=1, allow_nan=False)
+    paths["cells_md"] = os.path.join(out_dir, "cells.md")
+    with open(paths["cells_md"], "w") as f:
+        f.write(f"# Campaign `{store.manifest['name']}` — per-cell best "
+                f"PPA ({len(rows)} cells)\n\n")
+        f.write(markdown_table(rows, CELL_COLS))
+
+    adapt = adaptation_tables(store)
+    paths["adaptation_json"] = os.path.join(out_dir, "adaptation.json")
+    with open(paths["adaptation_json"], "w") as f:
+        json.dump(adapt, f, indent=1, allow_nan=False)
+    paths["adaptation_md"] = os.path.join(out_dir, "adaptation.md")
+    with open(paths["adaptation_md"], "w") as f:
+        f.write(f"# Campaign `{store.manifest['name']}` — cross-node "
+                f"adaptation\n")
+        for key, rws in sorted(adapt.items()):
+            f.write(f"\n## {key}\n\n")
+            f.write(markdown_table(rws, ADAPT_COLS))
+    return paths

@@ -1,0 +1,239 @@
+"""Campaign persistence: JSONL run directory + manifest + archive merge.
+
+Layout of one campaign run directory (``experiments/campaigns/<name>/``):
+
+    manifest.json            campaign spec, git sha, seed, per-cell status
+    cells/<cell_id>.jsonl    appended records per completed chunk:
+                               {"kind": "point", ...ArchiveEntry fields}
+                               {"kind": "summary", ...best-PPA row}
+    ckpt/<batch_id>/         in-flight search-state checkpoints
+                             (cleared when the batch completes)
+    report/                  per-cell + cross-node adaptation tables
+
+The manifest is the source of truth for resume: a cell is re-run iff its
+status is not ``done``.  All manifest writes are atomic (tmp + rename), so
+a kill at any point leaves either the old or the new manifest, never a torn
+one.  ``merge_runs`` unions per-cell Pareto archives across run directories
+with dominance filtering (resumed or parallel campaigns over the same grid).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import subprocess
+import tempfile
+import time
+from typing import Dict, List, Optional
+
+from repro.campaign.planner import CampaignSpec, Cell, CellBatch
+from repro.core.pareto import ArchiveEntry, ParetoArchive
+
+STATUS_PENDING = "pending"
+STATUS_RUNNING = "running"
+STATUS_DONE = "done"
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _atomic_write_json(path: str, payload: Dict) -> None:
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".tmp_manifest_")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1, allow_nan=False)
+        os.replace(tmp, path)
+    except Exception:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
+
+
+class CampaignStore:
+    """One campaign run directory (create once, reopen to resume)."""
+
+    def __init__(self, root: str, manifest: Dict):
+        self.root = root
+        self.manifest = manifest
+
+    # ------------------------------------------------------------ lifecycle
+    @classmethod
+    def create(cls, root: str, spec: CampaignSpec) -> "CampaignStore":
+        if os.path.exists(os.path.join(root, "manifest.json")):
+            raise FileExistsError(
+                f"{root} already holds a campaign; use resume or a new name")
+        os.makedirs(os.path.join(root, "cells"), exist_ok=True)
+        from repro.campaign.planner import cells as expand
+        manifest = dict(
+            name=spec.name, created=time.strftime("%Y-%m-%dT%H:%M:%S"),
+            git_sha=_git_sha(), seed=spec.seed,
+            episodes_per_cell=spec.episodes, spec=spec.to_dict(),
+            cells={c.cell_id: dict(status=STATUS_PENDING)
+                   for c in expand(spec)})
+        store = cls(root, manifest)
+        store.save_manifest()
+        return store
+
+    @classmethod
+    def open(cls, root: str) -> "CampaignStore":
+        path = os.path.join(root, "manifest.json")
+        if not os.path.isfile(path):
+            raise FileNotFoundError(f"no campaign manifest at {path}")
+        with open(path) as f:
+            return cls(root, json.load(f))
+
+    def save_manifest(self) -> None:
+        _atomic_write_json(os.path.join(self.root, "manifest.json"),
+                           self.manifest)
+
+    @property
+    def spec(self) -> CampaignSpec:
+        return CampaignSpec.from_dict(self.manifest["spec"])
+
+    # ------------------------------------------------------------ cell state
+    def status(self, cell: Cell) -> str:
+        rec = self.manifest["cells"].get(cell.cell_id)
+        return rec["status"] if rec else STATUS_PENDING
+
+    def pending_cells(self, batch: CellBatch) -> List[Cell]:
+        return [c for c in batch.cells if self.status(c) != STATUS_DONE]
+
+    def mark_running(self, batch: CellBatch) -> None:
+        for c in batch.cells:
+            rec = self.manifest["cells"].setdefault(c.cell_id, {})
+            if rec.get("status") != STATUS_DONE:
+                rec.update(status=STATUS_RUNNING, batch=batch.batch_id)
+        self.save_manifest()
+
+    def complete_cell(self, cell: Cell, summary: Dict,
+                      entries: List[ArchiveEntry]) -> None:
+        """Append the cell's frontier points + summary, then flip status.
+
+        JSONL first, manifest second: a kill between the two re-runs the
+        cell and appends a second frontier (deduplicated by the dominance
+        filter at merge/load time) — completed cells are never lost."""
+        self.append_points(cell.cell_id, entries)
+        self._append_line(cell.cell_id, dict(kind="summary", **summary))
+        self.manifest["cells"][cell.cell_id] = dict(
+            status=STATUS_DONE, completed=time.strftime("%Y-%m-%dT%H:%M:%S"),
+            **{k: summary[k] for k in ("ppa_score", "episodes", "wall_s")
+               if k in summary})
+        self.save_manifest()
+
+    def all_done(self) -> bool:
+        cs = self.manifest["cells"].values()
+        return bool(cs) and all(c["status"] == STATUS_DONE for c in cs)
+
+    # ------------------------------------------------------------- archives
+    def _cell_path(self, cell_id: str) -> str:
+        return os.path.join(self.root, "cells", f"{cell_id}.jsonl")
+
+    def _append_line(self, cell_id: str, payload: Dict) -> None:
+        os.makedirs(os.path.join(self.root, "cells"), exist_ok=True)
+        with open(self._cell_path(cell_id), "a") as f:
+            f.write(json.dumps(payload, allow_nan=False) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def append_points(self, cell_id: str,
+                      entries: List[ArchiveEntry]) -> None:
+        """Append evaluated design points (one JSONL line per point)."""
+        if not entries:
+            return
+        os.makedirs(os.path.join(self.root, "cells"), exist_ok=True)
+        with open(self._cell_path(cell_id), "a") as f:
+            for e in entries:
+                f.write(json.dumps(dict(kind="point", **e.to_dict()),
+                                   allow_nan=False) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def load_archive(self, cell_id: str) -> ParetoArchive:
+        """Rebuild the cell's Pareto archive from its JSONL (dominance-
+        filtered union over every appended chunk/run)."""
+        ar = ParetoArchive()
+        path = self._cell_path(cell_id)
+        if os.path.isfile(path):
+            with open(path) as f:
+                ar.insert_batch(_dedupe([
+                    ArchiveEntry.from_dict(rec) for rec in map(json.loads, f)
+                    if rec.get("kind") == "point"]))
+        return ar
+
+    def load_summary(self, cell_id: str) -> Optional[Dict]:
+        """Last summary line of the cell (None if never completed)."""
+        path = self._cell_path(cell_id)
+        out = None
+        if os.path.isfile(path):
+            with open(path) as f:
+                for rec in map(json.loads, f):
+                    if rec.get("kind") == "summary":
+                        out = rec
+        return out
+
+    def summaries(self) -> Dict[str, Dict]:
+        return {cid: s for cid in self.manifest["cells"]
+                if (s := self.load_summary(cid)) is not None}
+
+    # ----------------------------------------------------------- checkpoints
+    def ckpt_dir(self, batch_id: str) -> str:
+        return os.path.join(self.root, "ckpt", batch_id)
+
+    def clear_ckpt(self, batch_id: str) -> None:
+        shutil.rmtree(self.ckpt_dir(batch_id), ignore_errors=True)
+
+
+def _entry_key(e: ArchiveEntry) -> tuple:
+    """Identity of a frontier point for dedup/merge (design + objectives)."""
+    return (tuple(e.cfg.round(6).tolist()), e.power_mw, e.perf_gops,
+            e.area_mm2)
+
+
+def _dedupe(entries: List[ArchiveEntry]) -> List[ArchiveEntry]:
+    """Drop exact duplicates (same design point + objectives): duplicates
+    are mutually non-dominating, so without this a re-appended chunk would
+    inflate the frontier."""
+    out, keyset = [], set()
+    for e in entries:
+        k = _entry_key(e)
+        if k not in keyset:
+            keyset.add(k)
+            out.append(e)
+    return out
+
+
+def merge_runs(dst: CampaignStore, src_roots: List[str]
+               ) -> Dict[str, ParetoArchive]:
+    """Union per-cell archives from other run directories into ``dst``.
+
+    For every cell id present in any source, the source frontier points are
+    inserted into dst's archive with dominance filtering and the merged
+    frontier is appended to dst's JSONL (a fresh ``load_archive`` then
+    reconstructs exactly the merged frontier).  Returns the merged archives.
+    """
+    merged: Dict[str, ParetoArchive] = {}
+    cell_ids = set(dst.manifest["cells"])
+    srcs = [CampaignStore.open(r) for r in src_roots]
+    for s in srcs:
+        cell_ids |= set(s.manifest["cells"])
+    for cid in sorted(cell_ids):
+        own = dst.load_archive(cid)
+        pool = list(own.entries)
+        for s in srcs:
+            pool.extend(s.load_archive(cid).entries)
+        ar = ParetoArchive()
+        ar.insert_batch(_dedupe(pool))
+        have = {_entry_key(e) for e in own.entries}
+        if any(_entry_key(e) not in have for e in ar.entries):
+            dst.append_points(cid, ar.entries)
+        merged[cid] = ar
+    return merged

@@ -34,6 +34,30 @@ def _flatten(tree: Any) -> Dict[str, np.ndarray]:
     return flat
 
 
+def leaf_names(tree: Any) -> List[str]:
+    """Flat leaf names in tree order — the keys `save` writes arrays under.
+    Lets host-side callers pair `restore_flat` arrays with a template."""
+    return list(_flatten(tree).keys())
+
+
+def _json_safe(obj: Any) -> Any:
+    """Recursively coerce numpy scalars/arrays so `extra` always serializes.
+    Non-finite floats become strings ("inf"/"nan") so the manifest stays
+    strict JSON (json.dump would emit the non-standard Infinity token);
+    ``float()`` parses them back on restore."""
+    if isinstance(obj, dict):
+        return {str(k): _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_safe(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return _json_safe(obj.tolist())
+    if isinstance(obj, np.generic):
+        return _json_safe(obj.item())
+    if isinstance(obj, float) and not np.isfinite(obj):
+        return str(obj)
+    return obj
+
+
 def save(tree: Any, ckpt_dir: str, step: int, *, keep: int = 3,
          extra: Optional[Dict] = None) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
@@ -42,7 +66,7 @@ def save(tree: Any, ckpt_dir: str, step: int, *, keep: int = 3,
                     names=list(flat.keys()),
                     dtypes={k: str(v.dtype) for k, v in flat.items()},
                     shapes={k: list(v.shape) for k, v in flat.items()},
-                    extra=extra or {})
+                    extra=_json_safe(extra or {}))
     arrays = {}
     for k, v in flat.items():
         if v.dtype == jnp.bfloat16:
@@ -118,6 +142,30 @@ def restore(tree_template: Any, ckpt_dir: str, step: Optional[int] = None,
             arr = jax.device_put(arr, sh)
         out.append(arr)
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_flat(ckpt_dir: str, step: Optional[int] = None
+                 ) -> tuple[Dict[str, np.ndarray], Dict]:
+    """Raw host-side restore: (flat name->np.ndarray, manifest).
+
+    Unlike :func:`restore` this never routes arrays through ``jnp.asarray``,
+    so float64 host state (e.g. PER sum-tree priorities) survives without the
+    x64-disabled downcast.  Callers rebuild pytrees via :func:`leaf_names`.
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{int(step):08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    out = {}
+    for name in manifest["names"]:
+        arr = data[name]
+        if manifest["dtypes"][name] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        out[name] = arr
+    return out, manifest
 
 
 def manifest_of(ckpt_dir: str, step: Optional[int] = None) -> Dict:

@@ -40,6 +40,21 @@ class ArchiveEntry:
                    ppa_score=float(metrics[M_IDX["ppa_score"]]),
                    episode=episode)
 
+    def to_dict(self) -> Dict:
+        """JSON-safe dict; float64 reprs round-trip cfg exactly."""
+        d = dataclasses.asdict(self)
+        d["cfg"] = np.asarray(self.cfg, np.float64).tolist()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ArchiveEntry":
+        return cls(cfg=np.asarray(d["cfg"], np.float32),
+                   power_mw=float(d["power_mw"]),
+                   perf_gops=float(d["perf_gops"]),
+                   area_mm2=float(d["area_mm2"]), tok_s=float(d["tok_s"]),
+                   ppa_score=float(d["ppa_score"]),
+                   episode=int(d["episode"]))
+
 
 def _dominates(a: np.ndarray, b: np.ndarray) -> bool:
     return bool(np.all(a <= b) and np.any(a < b))
@@ -110,6 +125,28 @@ class ParetoArchive:
         score = (w_perf * (1.0 - norm(perf)) + w_power * norm(power)
                  + w_area * norm(area))
         return self.entries[int(np.argmin(score))]
+
+    def to_dict(self) -> Dict:
+        """JSON-ready snapshot of the full archive state."""
+        return dict(max_size=self.max_size, n_inserted=self.n_inserted,
+                    entries=[e.to_dict() for e in self.entries])
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ParetoArchive":
+        """Exact inverse of :meth:`to_dict` — entries are restored verbatim
+        (no re-insertion), so a save→load round trip preserves the frontier
+        bit-for-bit including entry order."""
+        ar = cls(max_size=int(d.get("max_size", 2048)))
+        ar.entries = [ArchiveEntry.from_dict(e) for e in d.get("entries", [])]
+        ar.n_inserted = int(d.get("n_inserted", len(ar.entries)))
+        return ar
+
+    def merge(self, other: "ParetoArchive") -> int:
+        """Union another archive's frontier into this one with dominance
+        filtering (the campaign-store merge across resumed/parallel runs);
+        returns how many of ``other``'s entries reached the frontier."""
+        return self.insert_batch([dataclasses.replace(e, cfg=e.cfg.copy())
+                                  for e in other.entries])
 
     def frontier(self) -> Dict[str, np.ndarray]:
         return dict(

@@ -9,12 +9,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint import manager as ckpt_mod
 from repro.core import actions as act
 from repro.core import mpc as mpc_mod
 from repro.core import sac as sac_mod
@@ -28,7 +30,7 @@ from repro.core.replay import PERBuffer
 from repro.core.state import SAC_STATE_DIM
 from repro.ppa import config_space as cs
 from repro.ppa import surrogate as sur_mod
-from repro.ppa.analytic import M_IDX
+from repro.ppa.analytic import M_DIM, M_IDX, evaluate_vec_jit
 from repro.workload.features import Workload
 
 
@@ -227,25 +229,71 @@ _plan_batch = jax.jit(jax.vmap(mpc_mod.plan,
                                in_axes=(None, None, None, 0, 0)))
 
 
-def run_search(workload: Workload, node_nm: int, *, high_perf: bool = True,
-               search: Optional[SearchConfig] = None, n_envs: int = 64
-               ) -> SearchResult:
-    """Algorithm 1 on the batched engine: ``n_envs`` parallel episodes per
-    device dispatch.
+def _restore_np_rng(state: Dict) -> np.random.Generator:
+    g = np.random.default_rng()
+    g.bit_generator.state = state
+    return g
 
-    The env hot path (action application, projection, analytic PPA, Eq.-34
-    reward) is one fused jit step over the whole batch; transitions land in
-    the PER buffer via one ``add_batch`` and feasible configurations reach
-    the Pareto archive via one ``insert_batch`` per dispatch.  SAC/world-
-    model updates run ``sc.updates_per_dispatch`` times per dispatch (the
-    scalar loop updates per env-step; see SearchConfig).  ``sc.episodes``
-    is the TOTAL env-step budget, matching the scalar driver.
+
+def _unflatten_from(flat: Dict[str, np.ndarray], prefix: str, template):
+    """Rebuild a device pytree from a ``restore_flat`` dict by leaf name."""
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    names = ckpt_mod.leaf_names(template)
+    return jax.tree_util.tree_unflatten(
+        treedef, [jnp.asarray(flat[f"{prefix}/{n}"]) for n in names])
+
+
+def _save_search_ckpt(ckpt_dir: str, step: int, tree: Dict, extra: Dict,
+                      *, keep: int = 2) -> str:
+    """Checkpoint hook: atomic save of the full search loop state.
+
+    Module-level so the kill/resume tests can wrap it; the campaign runner
+    points ``checkpoint_dir`` at its per-batch directory."""
+    return ckpt_mod.save(tree, ckpt_dir, step, keep=keep, extra=extra)
+
+
+def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
+                     high_perf: bool = True,
+                     search: Optional[SearchConfig] = None,
+                     lanes_per_cell: int = 64,
+                     checkpoint_dir: Optional[str] = None,
+                     checkpoint_every: int = 0,
+                     resume: bool = False) -> List[SearchResult]:
+    """Algorithm 1 on the batched engine over a mixed-node *cell batch*.
+
+    Each entry of ``node_nms`` is one search cell; every cell gets
+    ``lanes_per_cell`` parallel environments, so one fused jit dispatch
+    advances ``len(node_nms) * lanes_per_cell`` env-steps.  Node constants
+    are traced vectors inside the compiled step (``VecDSEEnv``), so
+    heterogeneous cells share ONE compiled step AND one SAC policy / PER
+    buffer / world model — the paper's "one RL loop adapts across nodes"
+    claim, operationalised: per dispatch the learner pays one update block
+    regardless of cell count, which is where the campaign engine's
+    cells/hour advantage over sequential single-cell runs comes from.
+
+    Per-cell state (Pareto archive, incumbent, trace, feasible/unique
+    counters) is tracked separately and one :class:`SearchResult` is
+    returned per cell, in ``node_nms`` order.  ``sc.episodes`` is the
+    PER-CELL env-step budget.
+
+    Checkpoint/restore: with ``checkpoint_dir`` set and ``checkpoint_every
+    > 0``, the complete loop state — SAC/world-model/surrogate parameters
+    and optimizers, PER buffer + sum-tree priorities, per-cell Pareto
+    archives and incumbents, epsilon schedule, and every host/device RNG —
+    is atomically checkpointed every ``checkpoint_every`` dispatches.
+    ``resume=True`` restarts from the latest checkpoint and is exact: a
+    killed-and-resumed run reproduces the uninterrupted run bit-for-bit
+    (test-enforced).
     """
     sc = search or SearchConfig()
-    b = n_envs
+    n_cells = len(node_nms)
+    if n_cells < 1:
+        raise ValueError("run_search_cells needs >= 1 cell")
+    lanes = lanes_per_cell
+    b = n_cells * lanes
     t0 = time.time()
-    env = VecDSEEnv(workload, node_nm, batch=b, high_perf=high_perf,
-                    seed=sc.seed)
+    env = VecDSEEnv(workload, np.repeat(node_nms, lanes).tolist(),
+                    high_perf=high_perf, seed=sc.seed)
     rng = np.random.default_rng(sc.seed)
     key = jax.random.PRNGKey(sc.seed)
 
@@ -255,24 +303,129 @@ def run_search(workload: Workload, node_nm: int, *, high_perf: bool = True,
                                          seed=sc.seed + 2)
     buf = PERBuffer(SAC_STATE_DIM, act.N_CONT, act.N_DISC, seed=sc.seed)
     eps_sched = EpsilonSchedule(sc.eps0, sc.eps_min, sc.episodes)
-    archive = ParetoArchive()
-    trace: List[TracePoint] = []
-    seen: set = set()
-    best = (np.inf, None, None)
-    feasible_count = 0
+    archives = [ParetoArchive() for _ in range(n_cells)]
+    traces: List[List[TracePoint]] = [[] for _ in range(n_cells)]
+    seen: List[set] = [set() for _ in range(n_cells)]
+    best: List[tuple] = [(np.inf, None, None) for _ in range(n_cells)]
+    feasible_count = np.zeros(n_cells, np.int64)
     last_entropy = 0.0
     no_improve = 0
-    sur_x: List[np.ndarray] = []
-    sur_y: List[np.ndarray] = []
+    # surrogate minibatch source: only the last 4 dispatches are ever read
+    sur_x: deque = deque(maxlen=4)
+    sur_y: deque = deque(maxlen=4)
 
-    s = env.reset()                                   # (B, 52)
-    n_steps = max(1, sc.episodes // b)
-    # reset_period bounds the per-env trajectory length, exactly as in the
-    # scalar loop (B episodes advance in parallel, not one sliced B ways)
+    n_steps = max(1, sc.episodes // lanes)
     reset_every = max(1, sc.reset_period)
-    trace_every = max(1, 50 // b)
-    t_env = 0
-    for t in range(n_steps):
+    trace_every = max(1, 50 // lanes)
+    start_t = 0
+    t_env = 0            # per-cell env-steps completed
+    resumed = False
+
+    if resume and checkpoint_dir and ckpt_mod.latest_step(checkpoint_dir):
+        flat, manifest = ckpt_mod.restore_flat(checkpoint_dir)
+        ex = manifest["extra"]
+        if (list(ex["node_nms"]) != [int(n) for n in node_nms]
+                or ex["lanes"] != lanes or ex["episodes"] != sc.episodes
+                or bool(ex["high_perf"]) != bool(high_perf)
+                or int(ex["seed"]) != sc.seed):
+            raise ValueError(
+                f"checkpoint in {checkpoint_dir} was written for cells "
+                f"{ex['node_nms']} x{ex['lanes']} lanes @{ex['episodes']} ep "
+                f"(high_perf={ex['high_perf']}, seed={ex['seed']}); got "
+                f"{list(node_nms)} x{lanes} @{sc.episodes} "
+                f"(high_perf={high_perf}, seed={sc.seed})")
+        sac_state = _unflatten_from(flat, "device/sac", sac_state)
+        wm_state = _unflatten_from(flat, "device/wm", wm_state)
+        surrogate.params = _unflatten_from(flat, "device/sur_params",
+                                           surrogate.params)
+        surrogate.opt_state = _unflatten_from(flat, "device/sur_opt",
+                                              surrogate.opt_state)
+        surrogate.resid_var = float(ex["sur_resid_var"])
+        surrogate.n_updates = int(ex["sur_n_updates"])
+        key = jnp.asarray(flat["device/key"])
+        for name in ("s", "a_cont", "a_disc", "r", "s2", "done"):
+            getattr(buf, name)[...] = flat[f"host/per_{name}"]
+        buf.tree.tree[...] = flat["host/per_tree"]
+        buf.pos, buf.size = int(ex["buf_pos"]), int(ex["buf_size"])
+        buf.max_priority = float(ex["buf_max_priority"])
+        buf.beta = float(ex["buf_beta"])
+        buf.rng = _restore_np_rng(ex["buf_rng"])
+        rng = _restore_np_rng(ex["rng"])
+        env.rngs = [_restore_np_rng(st) for st in ex["env_rngs"]]
+        env.cfg = jnp.asarray(flat["host/env_cfg"])
+        env.ranges = jnp.asarray(flat["host/env_ranges"])
+        s = flat["host/obs"]
+        for k in range(int(ex["sur_len"])):
+            sur_x.append(flat["host/sur_x"][k])
+            sur_y.append(flat["host/sur_y"][k])
+        archives = [ParetoArchive.from_dict(d) for d in ex["archives"]]
+        traces = [[TracePoint(**tp) for tp in tr] for tr in ex["traces"]]
+        seen = [set() for _ in range(n_cells)]
+        for row, c in zip(flat["host/seen_keys"], flat["host/seen_cell"]):
+            seen[int(c)].add(tuple(row.tolist()))
+        for c in range(n_cells):
+            if ex["best_has"][c]:
+                best[c] = (float(ex["best_score"][c]),
+                           flat["host/best_cfg"][c].copy(),
+                           flat["host/best_metrics"][c].copy())
+        feasible_count = np.asarray(ex["feasible_count"], np.int64)
+        no_improve = int(ex["no_improve"])
+        last_entropy = float(ex["last_entropy"])
+        eps_sched.eps = float(ex["eps"])
+        start_t = int(manifest["step"])
+        t_env = start_t * lanes
+        resumed = True
+    if not resumed:
+        s = env.reset()      # (B, 52)
+
+    def _checkpoint(t_next: int) -> None:
+        seen_keys = [k for c in range(n_cells) for k in seen[c]]
+        seen_cell = [c for c in range(n_cells) for _ in seen[c]]
+        xdim = SAC_STATE_DIM + act.N_CONT
+        tree = dict(
+            device=dict(sac=sac_state, wm=wm_state,
+                        sur_params=surrogate.params,
+                        sur_opt=surrogate.opt_state, key=np.asarray(key)),
+            host=dict(
+                per_s=buf.s, per_a_cont=buf.a_cont, per_a_disc=buf.a_disc,
+                per_r=buf.r, per_s2=buf.s2, per_done=buf.done,
+                per_tree=buf.tree.tree,
+                env_cfg=np.asarray(env.cfg), env_ranges=np.asarray(env.ranges),
+                obs=np.asarray(s),
+                sur_x=(np.stack(list(sur_x)) if sur_x
+                       else np.zeros((0, b, xdim), np.float32)),
+                sur_y=(np.stack(list(sur_y)) if sur_y
+                       else np.zeros((0, b, 1), np.float32)),
+                seen_keys=(np.asarray(seen_keys, np.float64)
+                           if seen_keys else np.zeros((0, cs.DIM))),
+                seen_cell=np.asarray(seen_cell, np.int64),
+                best_cfg=np.stack([
+                    best[c][1] if best[c][1] is not None
+                    else np.zeros(cs.DIM, np.float32) for c in range(n_cells)]),
+                best_metrics=np.stack([
+                    best[c][2] if best[c][2] is not None
+                    else np.zeros(M_DIM, np.float32)
+                    for c in range(n_cells)]),
+            ))
+        extra = dict(
+            node_nms=[int(n) for n in node_nms], lanes=lanes,
+            episodes=sc.episodes, high_perf=high_perf, seed=sc.seed,
+            eps=eps_sched.eps, rng=rng.bit_generator.state,
+            buf_rng=buf.rng.bit_generator.state,
+            env_rngs=[g.bit_generator.state for g in env.rngs],
+            buf_pos=buf.pos, buf_size=buf.size,
+            buf_max_priority=buf.max_priority, buf_beta=buf.beta,
+            sur_resid_var=surrogate.resid_var,
+            sur_n_updates=surrogate.n_updates, sur_len=len(sur_x),
+            archives=[a.to_dict() for a in archives],
+            traces=[[dataclasses.asdict(tp) for tp in tr] for tr in traces],
+            best_has=[best[c][1] is not None for c in range(n_cells)],
+            best_score=[float(best[c][0]) for c in range(n_cells)],
+            feasible_count=feasible_count.tolist(), no_improve=no_improve,
+            last_entropy=last_entropy)
+        _save_search_ckpt(checkpoint_dir, t_next, tree, extra)
+
+    for t in range(start_t, n_steps):
         key, k_act, k_upd, k_mpc = jax.random.split(key, 4)
         # ---- action selection: per-element eps-greedy (Alg. 1 l.6) -------
         a_c_rand, a_d_rand = act.random_action_batch(rng, b)
@@ -296,24 +449,27 @@ def run_search(workload: Workload, node_nm: int, *, high_perf: bool = True,
         buf.add_batch(s, a_c, a_d, r, s2, np.zeros(b, np.float32))
         sur_x.append(np.concatenate([s, a_c], axis=1).astype(np.float32))
         sur_y.append(info.metrics.astype(np.float32))
-        # ---- best tracking + batched Pareto insert (Alg. 1 l.15) ---------
-        prev_best_score = best[0]
-        feas_idx = np.nonzero(info.feasible)[0]
-        archive.insert_batch([
-            ArchiveEntry.from_metrics(info.cfg[i], info.metrics[i],
-                                      episode=t_env + int(i))
-            for i in feas_idx])
+        # ---- per-cell best tracking + batched Pareto insert (l.15) -------
+        improved = False
         scores = info.metrics[:, M_IDX["ppa_score"]]
-        if feas_idx.size:
-            j = int(feas_idx[np.argmin(scores[feas_idx])])
-            if float(scores[j]) < best[0]:
-                best = (float(scores[j]), info.cfg[j].copy(),
-                        info.metrics[j].copy())
-        feasible_count += int(info.feasible.sum())
-        for i in range(b):
-            seen.add(_cfg_key(info.cfg[i]))
-        t_env += b
-        no_improve = 0 if best[0] < prev_best_score else no_improve + b
+        for c in range(n_cells):
+            lo, hi = c * lanes, (c + 1) * lanes
+            feas_idx = lo + np.nonzero(info.feasible[lo:hi])[0]
+            archives[c].insert_batch([
+                ArchiveEntry.from_metrics(info.cfg[i], info.metrics[i],
+                                          episode=t_env + int(i) - lo)
+                for i in feas_idx])
+            if feas_idx.size:
+                j = int(feas_idx[np.argmin(scores[feas_idx])])
+                if float(scores[j]) < best[c][0]:
+                    best[c] = (float(scores[j]), info.cfg[j].copy(),
+                               info.metrics[j].copy())
+                    improved = True
+            feasible_count[c] += int(info.feasible[lo:hi].sum())
+            for i in range(lo, hi):
+                seen[c].add(_cfg_key(info.cfg[i]))
+        t_env += lanes
+        no_improve = 0 if improved else no_improve + lanes
         # ---- learn (Alg. 1 l.12-13) --------------------------------------
         if buf.size >= max(sc.batch_size, min(sc.warmup, sc.episodes // 4)):
             for _ in range(sc.updates_per_dispatch):
@@ -329,29 +485,30 @@ def run_search(workload: Workload, node_nm: int, *, high_perf: bool = True,
             wm_state, _ = wm_mod.train_step(
                 wm_state, jnp.asarray(wmb["s"]), jnp.asarray(wmb["a_cont"]),
                 jnp.asarray(wmb["s2"]))
-            if t % max(1, sc.surrogate_every // b) == 0 and len(sur_x) >= 1:
-                xs = np.concatenate(sur_x[-4:], axis=0)
-                ys = np.concatenate(sur_y[-4:], axis=0)
+            if t % max(1, sc.surrogate_every // lanes) == 0 and len(sur_x):
+                xs = np.concatenate(list(sur_x), axis=0)
+                ys = np.concatenate(list(sur_y), axis=0)
                 pick = rng.integers(0, len(xs), size=min(256, len(xs)))
                 surrogate.update(xs[pick], ys[pick])
-                if len(sur_x) > 20_000 // b:   # bound host memory
-                    sur_x = sur_x[-10_000 // b:]
-                    sur_y = sur_y[-10_000 // b:]
-        # ---- epsilon decay: B env-steps per dispatch (Eq. 9) -------------
-        found = feasible_count > 0
-        for _ in range(b):
+        # ---- epsilon decay: one per per-cell env-step (Eq. 9) ------------
+        found = bool(feasible_count.sum() > 0)
+        for _ in range(lanes):
             eps_sched.step(found_feasible=found)
         if t % trace_every == 0 or t == n_steps - 1:
-            trace.append(TracePoint(
-                episode=t_env, reward=float(np.mean(r)),
-                best_score=float(best[0]), eps=eps_sched.eps,
-                entropy=last_entropy, unique_configs=len(seen),
-                feasible_count=feasible_count,
-                tok_s=float(np.mean(info.metrics[:, M_IDX["tok_s"]]))))
+            for c in range(n_cells):
+                lo, hi = c * lanes, (c + 1) * lanes
+                traces[c].append(TracePoint(
+                    episode=t_env, reward=float(np.mean(r[lo:hi])),
+                    best_score=float(best[c][0]), eps=eps_sched.eps,
+                    entropy=last_entropy, unique_configs=len(seen[c]),
+                    feasible_count=int(feasible_count[c]),
+                    tok_s=float(np.mean(
+                        info.metrics[lo:hi, M_IDX["tok_s"]]))))
             if sc.verbose:
+                bb = min(float(best[c][0]) for c in range(n_cells))
                 print(f"  step {t:5d} (ep {t_env}) r={float(np.mean(r)):+.3f} "
-                      f"best={best[0]:.4f} eps={eps_sched.eps:.3f} "
-                      f"feas={feasible_count}")
+                      f"best={bb:.4f} eps={eps_sched.eps:.3f} "
+                      f"feas={int(feasible_count.sum())}")
         if t % reset_every == reset_every - 1:
             s = env.reset()
         else:
@@ -359,25 +516,58 @@ def run_search(workload: Workload, node_nm: int, *, high_perf: bool = True,
         if (no_improve > sc.early_stop_patience
                 and eps_sched.eps <= sc.eps_min + 1e-6):
             break
+        # checkpoint only live continuations (after the early-stop check:
+        # a resumed run must never execute dispatches the original skipped)
+        if checkpoint_dir and checkpoint_every > 0 \
+                and (t + 1) % checkpoint_every == 0 and t + 1 < n_steps:
+            _checkpoint(t + 1)
 
-    # ---- final selection: Pareto-scalarized (paper §3.10) ----------------
-    sel = archive.select(env.w_perf, env.w_power, env.w_area)
-    best_cfg = sel.cfg if sel is not None else best[1]
-    best_metrics = (env.evaluate_configs(best_cfg[None])[0]
-                    if best_cfg is not None else None)
-    hetero = None
-    if best_cfg is not None:
-        part = partition(workload.graph, best_cfg)
-        hetero = derive(best_cfg, part,
-                        weight_bytes_total=workload.f("weight_mb") * 1e6)
-    return SearchResult(
-        method="sac-vec", node_nm=node_nm, best_cfg=best_cfg,
-        best_metrics=best_metrics,
-        best_score=(float(best_metrics[M_IDX["ppa_score"]])
-                    if best_metrics is not None else float("inf")),
-        archive=archive, trace=trace, hetero=hetero, episodes_run=t_env,
-        feasible_count=feasible_count, unique_configs=len(seen),
-        wall_s=time.time() - t0)
+    # ---- final selection per cell: Pareto-scalarized (paper §3.10) -------
+    results = []
+    wall = time.time() - t0
+    for c, node_nm in enumerate(node_nms):
+        sel = archives[c].select(env.w_perf, env.w_power, env.w_area)
+        best_cfg = sel.cfg if sel is not None else best[c][1]
+        best_metrics = None
+        hetero = None
+        if best_cfg is not None:
+            best_metrics = np.asarray(evaluate_vec_jit(
+                cs.project(jnp.asarray(best_cfg, jnp.float32))[None],
+                env.wl_vec, env.node_mat[c * lanes][None]))[0]
+            part = partition(workload.graph, best_cfg)
+            hetero = derive(best_cfg, part,
+                            weight_bytes_total=workload.f("weight_mb") * 1e6)
+        results.append(SearchResult(
+            method="sac-vec", node_nm=int(node_nm), best_cfg=best_cfg,
+            best_metrics=best_metrics,
+            best_score=(float(best_metrics[M_IDX["ppa_score"]])
+                        if best_metrics is not None else float("inf")),
+            archive=archives[c], trace=traces[c], hetero=hetero,
+            episodes_run=t_env, feasible_count=int(feasible_count[c]),
+            unique_configs=len(seen[c]), wall_s=wall))
+    return results
+
+
+def run_search(workload: Workload, node_nm: int, *, high_perf: bool = True,
+               search: Optional[SearchConfig] = None, n_envs: int = 64,
+               checkpoint_dir: Optional[str] = None,
+               checkpoint_every: int = 0, resume: bool = False
+               ) -> SearchResult:
+    """Algorithm 1 on the batched engine: ``n_envs`` parallel episodes per
+    device dispatch (the single-cell view of :func:`run_search_cells`).
+
+    The env hot path (action application, projection, analytic PPA, Eq.-34
+    reward) is one fused jit step over the whole batch; transitions land in
+    the PER buffer via one ``add_batch`` and feasible configurations reach
+    the Pareto archive via one ``insert_batch`` per dispatch.  SAC/world-
+    model updates run ``sc.updates_per_dispatch`` times per dispatch (the
+    scalar loop updates per env-step; see SearchConfig).  ``sc.episodes``
+    is the TOTAL env-step budget, matching the scalar driver.
+    """
+    return run_search_cells(
+        workload, [node_nm], high_perf=high_perf, search=search,
+        lanes_per_cell=n_envs, checkpoint_dir=checkpoint_dir,
+        checkpoint_every=checkpoint_every, resume=resume)[0]
 
 
 def search_all_nodes(workload: Workload, nodes: Sequence[int], *,

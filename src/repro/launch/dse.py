@@ -8,13 +8,17 @@ convergence trace the paper's tables/figures are generated from.
 stepped per round with one shared policy; candidate evaluation is the
 vmapped analytic PPA (on TPU this shards over the mesh via jit — the
 1.4M evals/s batch evaluator; DESIGN.md §3 adaptation note 2).
+
+``--campaign grid.yaml`` runs a persistent multi-workload x multi-node
+campaign (``repro.campaign``) instead of a single search; ``--resume
+<run-dir>`` continues a killed campaign from its last completed chunk.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -89,7 +93,31 @@ def run(arch: str, *, nodes: List[int], mode: str, episodes: int,
     return rows
 
 
-def main() -> None:
+def validate_args(ap: argparse.ArgumentParser,
+                  a: argparse.Namespace) -> None:
+    """Reject invalid flag combinations up front with a one-line error
+    (instead of a deep traceback later in the engine)."""
+    if a.n_envs < 1:
+        ap.error(f"--n-envs must be >= 1 (got {a.n_envs})")
+    if a.engine == "scalar" and a.n_envs != ap.get_default("n_envs"):
+        ap.error(f"--n-envs {a.n_envs} only applies to --engine vec; the "
+                 "scalar engine steps one environment (drop --n-envs or "
+                 "pass --engine vec)")
+    if a.engine == "vec" and a.method != "sac":
+        ap.error(f"--engine vec only drives the SAC search loop; "
+                 f"--method {a.method} runs on the scalar evaluator "
+                 "(drop --engine vec)")
+    if a.campaign and a.resume:
+        ap.error("--campaign starts a new run and --resume continues an "
+                 "existing one; pass exactly one")
+    if a.campaign and not os.path.isfile(a.campaign):
+        ap.error(f"--campaign grid file not found: {a.campaign}")
+    if a.resume and not os.path.isfile(os.path.join(a.resume,
+                                                    "manifest.json")):
+        ap.error(f"--resume: no campaign manifest under {a.resume}")
+
+
+def main(argv: Optional[List[str]] = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.1-8b")
     ap.add_argument("--mode", default="high-performance",
@@ -109,8 +137,24 @@ def main() -> None:
                          "parallel episodes per jit dispatch")
     ap.add_argument("--n-envs", type=int, default=64,
                     help="environments per dispatch for --engine vec")
+    ap.add_argument("--campaign", default="",
+                    help="grid spec (.yaml/.json): run a full multi-workload"
+                         " x multi-node campaign instead of a single search")
+    ap.add_argument("--resume", default="",
+                    help="existing campaign run directory to resume")
+    ap.add_argument("--campaign-root", default="experiments/campaigns",
+                    help="parent directory for new campaign run dirs")
     ap.add_argument("--verbose", action="store_true")
-    a = ap.parse_args()
+    a = ap.parse_args(argv)
+    validate_args(ap, a)
+    if a.campaign or a.resume:
+        from repro.campaign import CampaignSpec, run_campaign
+        if a.resume:
+            run_campaign(a.resume, resume=True)
+        else:
+            spec = CampaignSpec.from_file(a.campaign)
+            run_campaign(os.path.join(a.campaign_root, spec.name), spec)
+        return
     nodes = list(NODES) if a.nodes == "all" else [
         int(x) for x in a.nodes.split(",")]
     run(a.arch, nodes=nodes, mode=a.mode, episodes=a.episodes,

@@ -1,0 +1,239 @@
+"""Campaign subsystem: planner packing, store persistence, kill+resume
+(cell level and mid-batch chunk level), report artifacts, and the DSE CLI
+(validation + --campaign/--resume)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import repro.core.search as search_mod
+from repro.campaign import (CampaignSpec, CampaignStore, merge_runs, plan,
+                            run_campaign)
+from repro.campaign.planner import Cell, cells
+from repro.campaign.store import STATUS_DONE
+from repro.core.pareto import ArchiveEntry
+from repro.launch import dse
+
+ARCH = "smollm-135m"
+
+
+def tiny_spec(name, **kw):
+    base = dict(name=name, workloads=[ARCH], nodes=[3, 7],
+                modes=["high_perf"], episodes=32, lanes=4, max_envs=8,
+                seed=0, seq_len=256, batch=1, checkpoint_every=2)
+    base.update(kw)
+    return CampaignSpec(**base)
+
+
+# ---------------------------------------------------------------- planner
+def test_grid_expansion_and_packing():
+    spec = CampaignSpec(name="g", workloads=["llama3.1-8b", "smolvlm"],
+                        nodes=[3, 5, 7, 10, 14], modes=["high_perf",
+                                                        "low_power"],
+                        episodes=64, lanes=8, max_envs=32)
+    cs = cells(spec)
+    assert len(cs) == spec.n_cells == 2 * 5 * 2
+    assert len(set(c.cell_id for c in cs)) == len(cs)
+    batches = plan(spec)
+    # every batch: homogeneous (arch, mode), <= max_envs//lanes cells
+    for b in batches:
+        assert len(b.node_nms) * spec.lanes <= spec.max_envs
+        assert all(c.arch == b.arch and c.mode == b.mode for c in b.cells)
+    # every cell appears exactly once across batches
+    packed = [c.cell_id for b in batches for c in b.cells]
+    assert sorted(packed) == sorted(c.cell_id for c in cs)
+    # 5 nodes at 4 cells/batch -> 2 batches per (arch, mode) group
+    assert len(batches) == 2 * 2 * 2
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="unknown workloads"):
+        CampaignSpec(name="x", workloads=["nope"])
+    with pytest.raises(ValueError, match="unknown process nodes"):
+        CampaignSpec(name="x", workloads=[ARCH], nodes=[4])
+    with pytest.raises(ValueError, match="unknown modes"):
+        CampaignSpec(name="x", workloads=[ARCH], modes=["turbo"])
+    with pytest.raises(ValueError, match="max_envs"):
+        CampaignSpec(name="x", workloads=[ARCH], lanes=64, max_envs=8)
+    with pytest.raises(ValueError, match="unknown campaign spec keys"):
+        CampaignSpec.from_dict(dict(name="x", workloads=[ARCH], nope=1))
+
+
+# ------------------------------------------------------------------ store
+def test_store_create_append_reload(tmp_path):
+    spec = tiny_spec("s1")
+    root = str(tmp_path / "s1")
+    store = CampaignStore.create(root, spec)
+    assert not store.all_done()
+    cell = Cell(ARCH, 3, "high_perf")
+    rng = np.random.default_rng(0)
+    es = [ArchiveEntry(cfg=rng.uniform(0, 1, 30).astype(np.float32),
+                       power_mw=float(100 + i), perf_gops=float(100 - i),
+                       area_mm2=10.0, tok_s=1.0, ppa_score=0.5, episode=i)
+          for i in range(5)]
+    store.complete_cell(cell, dict(cell_id=cell.cell_id, ppa_score=0.5,
+                                   episodes=32, wall_s=1.0), es)
+    re = CampaignStore.open(root)
+    assert re.status(cell) == STATUS_DONE
+    assert re.load_summary(cell.cell_id)["ppa_score"] == 0.5
+    ar = re.load_archive(cell.cell_id)
+    # only (100, 100-0) is non-dominated in this stream
+    assert len(ar) == 1 and ar.entries[0].power_mw == 100.0
+    # double-append (kill between JSONL append and manifest write) must not
+    # inflate the frontier on reload
+    re.append_points(cell.cell_id, es)
+    assert len(re.load_archive(cell.cell_id)) == 1
+
+
+def test_store_refuses_overwrite(tmp_path):
+    root = str(tmp_path / "dup")
+    CampaignStore.create(root, tiny_spec("dup"))
+    with pytest.raises(FileExistsError):
+        CampaignStore.create(root, tiny_spec("dup"))
+
+
+def test_merge_runs_dominance(tmp_path):
+    spec = tiny_spec("m")
+    a = CampaignStore.create(str(tmp_path / "a"), spec)
+    b = CampaignStore.create(str(tmp_path / "b"), spec)
+    cid = Cell(ARCH, 3, "high_perf").cell_id
+    mk = lambda p, g, i: ArchiveEntry(
+        cfg=np.full(30, float(i), np.float32), power_mw=p, perf_gops=g,
+        area_mm2=1.0, tok_s=1.0, ppa_score=0.1, episode=i)
+    a.append_points(cid, [mk(10.0, 50.0, 0), mk(20.0, 90.0, 1)])
+    b.append_points(cid, [mk(5.0, 50.0, 2),     # dominates a's first
+                          mk(20.0, 90.0, 1),    # exact duplicate of a's
+                          mk(30.0, 95.0, 3)])
+    merged = merge_runs(a, [str(tmp_path / "b")])
+    objs = sorted((e.power_mw, e.perf_gops) for e in merged[cid].entries)
+    assert objs == [(5.0, 50.0), (20.0, 90.0), (30.0, 95.0)]
+    # reload from dst's JSONL reconstructs exactly the merged frontier
+    assert sorted((e.power_mw, e.perf_gops)
+                  for e in a.load_archive(cid).entries) == objs
+
+
+# ------------------------------------------- campaign execution + resume
+def test_campaign_kill_and_resume_no_lost_cells(tmp_path, monkeypatch):
+    """Kill the campaign after the first batch completes; resume must skip
+    the completed cells (no re-run) and finish the rest."""
+    spec = tiny_spec("kr", modes=["high_perf", "low_power"])  # 2 batches
+    root = str(tmp_path / "kr")
+    real = search_mod.run_search_cells
+    calls = []
+
+    def tracking(wl, node_nms, **kw):
+        calls.append(tuple(node_nms))
+        if len(calls) == 2:
+            raise KeyboardInterrupt("simulated kill between batches")
+        return real(wl, node_nms, **kw)
+
+    monkeypatch.setattr("repro.campaign.runner.run_search_cells", tracking)
+    with pytest.raises(KeyboardInterrupt):
+        run_campaign(root, spec, progress=lambda m: None)
+
+    store = CampaignStore.open(root)
+    done = [cid for cid, r in store.manifest["cells"].items()
+            if r["status"] == STATUS_DONE]
+    assert sorted(done) == sorted(
+        c.cell_id for c in plan(spec)[0].cells), "batch-1 cells lost"
+
+    calls.clear()
+    store = run_campaign(root, resume=True, progress=lambda m: None)
+    assert store.all_done()
+    assert calls == [plan(spec)[1].node_nms], \
+        f"resume re-ran completed cells: {calls}"
+    # completed cells kept their results
+    for cid in done:
+        assert store.load_summary(cid) is not None
+
+
+def test_campaign_midbatch_checkpoint_resume_exact(tmp_path, monkeypatch):
+    """Kill mid-batch AFTER a checkpoint; resume must reproduce the
+    uninterrupted campaign bit-for-bit (no lost chunk, exact state)."""
+    spec = tiny_spec("ck", nodes=[3, 7], episodes=48, checkpoint_every=3)
+    ref = run_campaign(str(tmp_path / "ref"), spec, progress=lambda m: None)
+
+    real_save = search_mod._save_search_ckpt
+    saves = []
+
+    def killing_save(*args, **kw):
+        out = real_save(*args, **kw)
+        saves.append(args[1])
+        if len(saves) == 2:
+            raise KeyboardInterrupt("simulated kill after checkpoint")
+        return out
+
+    monkeypatch.setattr(search_mod, "_save_search_ckpt", killing_save)
+    root = str(tmp_path / "ck")
+    with pytest.raises(KeyboardInterrupt):
+        run_campaign(root, spec, progress=lambda m: None)
+    monkeypatch.setattr(search_mod, "_save_search_ckpt", real_save)
+    store = run_campaign(root, resume=True, progress=lambda m: None)
+
+    assert store.all_done()
+    for cid, s_ref in ref.summaries().items():
+        s = store.load_summary(cid)
+        assert s["ppa_score"] == s_ref["ppa_score"], cid
+        assert s["episodes"] == s_ref["episodes"], cid
+        f1 = ref.load_archive(cid).frontier()
+        f2 = store.load_archive(cid).frontier()
+        for k in f1:
+            assert np.array_equal(np.sort(f1[k]), np.sort(f2[k])), (cid, k)
+
+
+def test_campaign_reports(tmp_path):
+    spec = tiny_spec("rep")
+    store = run_campaign(str(tmp_path / "rep"), spec,
+                         progress=lambda m: None)
+    rep = os.path.join(store.root, "report")
+    with open(os.path.join(rep, "adaptation.json")) as f:
+        adapt = json.load(f)
+    key = f"{ARCH}__high_perf"
+    assert key in adapt and len(adapt[key]) == 2          # one row per node
+    assert [r["node_nm"] for r in adapt[key]] == [3, 7]
+    md = open(os.path.join(rep, "adaptation.md")).read()
+    assert "| node_nm |" in md and key in md
+    with open(os.path.join(rep, "cells.json")) as f:
+        assert len(json.load(f)) == spec.n_cells
+
+
+# -------------------------------------------------------------------- CLI
+def test_cli_rejects_scalar_with_n_envs(capsys):
+    with pytest.raises(SystemExit):
+        dse.main(["--engine", "scalar", "--n-envs", "4"])
+    err = capsys.readouterr().err
+    assert "--engine vec" in err and "--n-envs" in err
+
+
+def test_cli_rejects_bad_combos(capsys):
+    with pytest.raises(SystemExit):
+        dse.main(["--n-envs", "0"])
+    assert "--n-envs must be >= 1" in capsys.readouterr().err
+    with pytest.raises(SystemExit):
+        dse.main(["--engine", "vec", "--method", "grid"])
+    assert "--method grid" in capsys.readouterr().err
+    with pytest.raises(SystemExit):
+        dse.main(["--campaign", "nope.yaml", "--resume", "somewhere"])
+    assert "exactly one" in capsys.readouterr().err
+    with pytest.raises(SystemExit):
+        dse.main(["--campaign", "/does/not/exist.yaml"])
+    assert "not found" in capsys.readouterr().err
+    with pytest.raises(SystemExit):
+        dse.main(["--resume", "/does/not/exist"])
+    assert "manifest" in capsys.readouterr().err
+
+
+def test_cli_campaign_end_to_end(tmp_path):
+    grid = tmp_path / "grid.json"
+    grid.write_text(json.dumps(dict(
+        name="cli", workloads=[ARCH], nodes=[3, 7], modes=["high_perf"],
+        episodes=32, lanes=4, max_envs=8, seed=0, seq_len=256, batch=1,
+        checkpoint_every=2)))
+    dse.main(["--campaign", str(grid),
+              "--campaign-root", str(tmp_path / "runs")])
+    store = CampaignStore.open(str(tmp_path / "runs" / "cli"))
+    assert store.all_done()
+    assert store.manifest["git_sha"]
+    # and --resume on a finished campaign is a no-op that still reports
+    dse.main(["--resume", str(tmp_path / "runs" / "cli")])

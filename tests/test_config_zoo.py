@@ -1,0 +1,58 @@
+"""Smoke coverage for the ENTIRE config zoo: every module in
+``repro.configs`` must yield a valid workload for the DSE plane via
+``repro.workload.extract`` — finite, non-negative features of the right
+dimension and a non-trivial operator graph.  (Before the campaign
+subsystem most zoo configs had zero coverage.)"""
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.workload.extract import extract
+from repro.workload.features import WL_DIM, WL_IDX
+
+RATIO_FIELDS = ("ilp", "mem_intensity", "vector_util", "matmul_ratio",
+                "conv_ratio", "scalar_ratio", "vector_ratio",
+                "autoregressive", "spec_decode_ok")
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def wl(request):
+    return extract(get_config(request.param), seq_len=512, batch=1)
+
+
+def test_features_shape_and_finite(wl):
+    assert wl.features.shape == (WL_DIM,)
+    assert wl.features.dtype == np.float32
+    assert np.all(np.isfinite(wl.features)), \
+        f"{wl.arch_name}: non-finite features"
+
+
+def test_features_non_negative(wl):
+    assert np.all(wl.features >= 0.0), \
+        f"{wl.arch_name}: negative features at " \
+        f"{[n for n, i in WL_IDX.items() if wl.features[i] < 0]}"
+
+
+def test_ratio_features_bounded(wl):
+    for name in RATIO_FIELDS:
+        v = wl.features[WL_IDX[name]]
+        assert 0.0 <= v <= 1.0, f"{wl.arch_name}: {name}={v} outside [0,1]"
+
+
+def test_core_magnitudes(wl):
+    assert wl.f("params_total") > 0
+    assert wl.f("params_active") > 0
+    assert wl.f("params_active") <= wl.f("params_total") * (1 + 1e-6)
+    assert wl.f("flops_per_token") > 0
+    assert wl.f("weight_mb") > 0
+    assert wl.f("n_layers") >= 1
+
+
+def test_graph_well_formed(wl):
+    g = wl.graph
+    assert g.n_ops > 2
+    assert np.isfinite(g.flops).all() and (g.flops >= 0).all()
+    assert np.isfinite(g.weight_bytes).all() and (g.weight_bytes >= 0).all()
+    assert g.flops.sum() > 0
+    if g.edges.size:
+        assert g.edges.min() >= 0 and g.edges.max() < g.n_ops
