@@ -1,0 +1,75 @@
+"""CI benchmark-floor gate: fail if committed perf ratios regress.
+
+Reads the benchmark tables written under ``experiments/tables/`` and
+enforces the committed floors:
+
+  * ``bench_vec_env.json``        speedup            >= 10x
+    (batched VecDSEEnv vs the scalar DSEEnv loop)
+  * ``bench_campaign.json``       speedup            >= 3x
+    (campaign engine vs sequential single-cell runs)
+  * ``bench_gated_campaign.json`` evals_saved_ratio  >= 2x
+    and ``ppa_within_tol`` (surrogate-gated screening vs ungated)
+
+Exit 0 iff every present table passes and none is missing.  CI runs this
+after the benchmark smoke job so the perf trajectory is regression-gated
+the same way tier-1 correctness is.
+
+Run:  PYTHONPATH=src python -m benchmarks.check_floors [tables_dir]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+# table file -> list of (metric, floor, direction) requirements;
+# "bool" requires truthiness rather than a numeric floor.
+FLOORS = {
+    "bench_vec_env.json": [("speedup", 10.0, "min")],
+    "bench_campaign.json": [("speedup", 3.0, "min")],
+    "bench_gated_campaign.json": [("evals_saved_ratio", 2.0, "min"),
+                                  ("ppa_within_tol", True, "bool")],
+}
+
+
+def check(tables_dir: str) -> int:
+    failures = []
+    for fname, reqs in sorted(FLOORS.items()):
+        path = os.path.join(tables_dir, fname)
+        if not os.path.isfile(path):
+            failures.append(f"{fname}: MISSING (benchmark did not run?)")
+            continue
+        with open(path) as f:
+            table = json.load(f)
+        for metric, floor, kind in reqs:
+            val = table.get(metric)
+            if kind == "bool":
+                ok = bool(val)
+                shown = f"{metric}={val}"
+            else:
+                ok = isinstance(val, (int, float)) and val >= floor
+                shown = f"{metric}={val if val is None else round(val, 3)}" \
+                        f" (floor {floor})"
+            status = "OK  " if ok else "FAIL"
+            print(f"[floors] {status} {fname}: {shown}")
+            if not ok:
+                failures.append(f"{fname}: {shown}")
+    if failures:
+        print(f"[floors] {len(failures)} regression(s) below committed "
+              f"floors:", file=sys.stderr)
+        for f in failures:
+            print(f"[floors]   {f}", file=sys.stderr)
+        return 1
+    print("[floors] all benchmark floors hold")
+    return 0
+
+
+def main() -> None:
+    tables_dir = (sys.argv[1] if len(sys.argv) > 1
+                  else os.environ.get("REPRO_BENCH_OUT",
+                                      "experiments/tables"))
+    raise SystemExit(check(tables_dir))
+
+
+if __name__ == "__main__":
+    main()

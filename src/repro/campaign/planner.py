@@ -15,6 +15,7 @@ from typing import Dict, List, Sequence
 
 from repro.configs.base import ARCH_IDS
 from repro.ppa.nodes import NODES
+from repro.ppa.surrogate import TAU_SUR_DEFAULT
 
 MODES = ("high_perf", "low_power")
 
@@ -73,6 +74,13 @@ class CampaignSpec:
     seq_len: int = 2048
     batch: int = 3               # decode batch fed to workload extraction
     checkpoint_every: int = 8    # dispatches between search checkpoints
+    # surrogate-gated candidate screening (see repro.core.search): once a
+    # cell's surrogate residual variance passes gate_threshold (Eq. 67),
+    # screen_k candidates are proposed per env-step and only the surrogate's
+    # top-1 survivor pays a full analytic evaluation.
+    surrogate_gate: bool = True
+    screen_k: int = 4
+    gate_threshold: float = TAU_SUR_DEFAULT
 
     def __post_init__(self) -> None:
         unknown = [w for w in self.workloads if w not in ARCH_IDS]
@@ -90,6 +98,11 @@ class CampaignSpec:
         if self.max_envs < self.lanes:
             raise ValueError(f"max_envs ({self.max_envs}) must be >= lanes "
                              f"({self.lanes})")
+        if self.screen_k < 1:
+            raise ValueError(f"screen_k must be >= 1 (got {self.screen_k})")
+        if self.gate_threshold < 0:
+            raise ValueError(f"gate_threshold must be >= 0 "
+                             f"(got {self.gate_threshold})")
 
     @property
     def n_cells(self) -> int:
@@ -101,10 +114,25 @@ class CampaignSpec:
     @classmethod
     def from_dict(cls, d: Dict) -> "CampaignSpec":
         known = {f.name for f in dataclasses.fields(cls)}
-        extra = set(d) - known
+        extra = sorted(set(d) - known)
         if extra:
-            raise ValueError(f"unknown campaign spec keys {sorted(extra)}; "
-                             f"known: {sorted(known)}")
+            import difflib
+            hints = []
+            for k in extra:
+                close = difflib.get_close_matches(k, known, n=1)
+                hints.append(f"{k!r}" + (f" (did you mean {close[0]!r}?)"
+                                         if close else ""))
+            raise ValueError(
+                f"unknown campaign spec keys {', '.join(hints)}; "
+                f"known keys: {sorted(known)}")
+        missing = [f.name for f in dataclasses.fields(cls)
+                   if f.default is dataclasses.MISSING
+                   and f.default_factory is dataclasses.MISSING
+                   and f.name not in d]
+        if missing:
+            raise ValueError(f"campaign spec missing required "
+                             f"key{'s' if len(missing) > 1 else ''} "
+                             f"{missing}")
         return cls(**d)
 
     @classmethod
@@ -118,7 +146,13 @@ class CampaignSpec:
             except ImportError as e:   # pragma: no cover
                 raise RuntimeError(
                     f"{path}: pyyaml not installed; use a .json grid") from e
-            return cls.from_dict(yaml.safe_load(text))
+            try:
+                payload = yaml.safe_load(text)
+            except yaml.YAMLError as e:
+                # ValueError so CLI error handling treats YAML syntax
+                # errors like JSON ones (json.JSONDecodeError is one)
+                raise ValueError(f"invalid YAML: {e}") from e
+            return cls.from_dict(payload)
         return cls.from_dict(json.loads(text))
 
 

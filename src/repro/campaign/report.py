@@ -17,7 +17,8 @@ from typing import Dict, List, Optional, Sequence
 
 CELL_COLS = ("cell_id", "mesh", "fetch", "vlen", "wmem_kb", "dmem_kb",
              "freq_mhz", "tok_s", "power_mw", "area_mm2", "ppa_score",
-             "episodes", "frontier", "wall_s")
+             "episodes", "frontier", "gate_open_episode", "screened",
+             "evaluated", "wall_s")
 ADAPT_COLS = ("node_nm", "mesh", "fetch", "vlen", "wmem_kb", "dmem_kb",
               "freq_mhz", "tok_s", "power_mw", "area_mm2", "ppa_score")
 

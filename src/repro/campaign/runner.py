@@ -35,7 +35,9 @@ def cell_summary(cell: Cell, res: SearchResult) -> Dict:
                mode=cell.mode, method=res.method,
                episodes=res.episodes_run, feasible=res.feasible_count,
                unique=res.unique_configs, frontier=len(res.archive),
-               wall_s=round(res.wall_s, 2))
+               wall_s=round(res.wall_s, 2),
+               gate_open_episode=res.gate_open_episode,
+               screened=res.screened, evaluated=res.evaluated)
     if res.best_cfg is not None:
         c = lambda n: float(res.best_cfg[cs.IDX[n]])
         row.update(mesh=f"{int(round(c('mesh_w')))}x{int(round(c('mesh_h')))}",
@@ -61,7 +63,10 @@ def run_batch(store: CampaignStore, batch: CellBatch,
               ) -> List[SearchResult]:
     """Run one mixed-node batch to completion (resuming any checkpoint)."""
     sc = SearchConfig(episodes=spec.episodes,
-                      seed=spec.seed + 1000 * batch.index)
+                      seed=spec.seed + 1000 * batch.index,
+                      surrogate_gate=spec.surrogate_gate,
+                      screen_k=spec.screen_k,
+                      gate_threshold=spec.gate_threshold)
     return run_search_cells(
         workload, list(batch.node_nms), high_perf=batch.mode == "high_perf",
         search=sc, lanes_per_cell=spec.lanes,
@@ -134,7 +139,10 @@ def run_cells_sequential(spec: CampaignSpec,
                      batch=spec.batch)
         for i, node in enumerate(batch.node_nms):
             sc = SearchConfig(episodes=spec.episodes,
-                              seed=spec.seed + 1000 * batch.index + i)
+                              seed=spec.seed + 1000 * batch.index + i,
+                              surrogate_gate=spec.surrogate_gate,
+                              screen_k=spec.screen_k,
+                              gate_threshold=spec.gate_threshold)
             out.extend(run_search_cells(
                 wl, [node], high_perf=batch.mode == "high_perf",
                 search=sc, lanes_per_cell=spec.lanes))

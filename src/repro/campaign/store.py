@@ -125,7 +125,9 @@ class CampaignStore:
         self._append_line(cell.cell_id, dict(kind="summary", **summary))
         self.manifest["cells"][cell.cell_id] = dict(
             status=STATUS_DONE, completed=time.strftime("%Y-%m-%dT%H:%M:%S"),
-            **{k: summary[k] for k in ("ppa_score", "episodes", "wall_s")
+            **{k: summary[k] for k in ("ppa_score", "episodes", "wall_s",
+                                       "gate_open_episode", "screened",
+                                       "evaluated")
                if k in summary})
         self.save_manifest()
 

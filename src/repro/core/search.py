@@ -53,6 +53,16 @@ class SearchConfig:
     # The scalar loop updates once per env-step; one dispatch advances
     # n_envs env-steps, so this trades update density for env throughput.
     updates_per_dispatch: int = 4
+    # surrogate-gated screening (vectorized engine only): once a cell's
+    # calibrated surrogate residual variance passes the Eq.-67 gate, every
+    # env proposes screen_k candidate actions per step, the shared surrogate
+    # scores them in the fused step, and only the top-1 survivor pays the
+    # full analytic evaluation.  Before the gate opens (and with
+    # surrogate_gate=False) the path is bitwise identical to the ungated
+    # engine.
+    surrogate_gate: bool = True
+    screen_k: int = 4
+    gate_threshold: float = sur_mod.TAU_SUR_DEFAULT
 
 
 @dataclasses.dataclass
@@ -81,6 +91,12 @@ class SearchResult:
     feasible_count: int
     unique_configs: int
     wall_s: float
+    # surrogate-gate accounting (vectorized engine; see SearchConfig):
+    # env-step at which this cell's Eq.-67 gate opened (None = never),
+    # candidates screened and full analytic evaluations spent.
+    gate_open_episode: Optional[int] = None
+    screened: int = 0
+    evaluated: int = 0
 
     def metric(self, name: str) -> float:
         if self.best_metrics is None:
@@ -218,7 +234,7 @@ def run_sac(workload: Workload, node_nm: int, *, high_perf: bool = True,
                     if best_metrics is not None else float("inf")),
         archive=archive, trace=trace, hetero=hetero, episodes_run=t + 1,
         feasible_count=feasible_count, unique_configs=len(seen),
-        wall_s=time.time() - t0)
+        wall_s=time.time() - t0, screened=t + 1, evaluated=t + 1)
 
 
 # --------------------------------------------------------------------------
@@ -276,11 +292,27 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
     returned per cell, in ``node_nms`` order.  ``sc.episodes`` is the
     PER-CELL env-step budget.
 
+    Surrogate-gated screening (``sc.surrogate_gate``, on by default): the
+    shared surrogate's residual variance is calibrated online PER CELL
+    (Eq. 66); once a cell passes the Eq.-67 gate (``sc.gate_threshold``),
+    each of its envs proposes ``sc.screen_k`` candidate actions per step,
+    the surrogate scores them inside one fused call, and only the top-1
+    survivor pays the full analytic evaluation — multiplying explored
+    candidates per analytic evaluation by up to K.  Candidate 0 is always
+    the exact action the ungated path would take and the extra-candidate
+    streams are dedicated RNGs, so before any gate opens (or with
+    ``surrogate_gate=False``) results are bitwise identical to the ungated
+    engine (test-enforced).  Per-cell ``gate_open_episode`` and
+    screened/evaluated counters are reported on each ``SearchResult``.
+
     Checkpoint/restore: with ``checkpoint_dir`` set and ``checkpoint_every
     > 0``, the complete loop state — SAC/world-model/surrogate parameters
     and optimizers, PER buffer + sum-tree priorities, per-cell Pareto
-    archives and incumbents, epsilon schedule, and every host/device RNG —
-    is atomically checkpointed every ``checkpoint_every`` dispatches.
+    archives and incumbents, epsilon schedule, Eq.-67 gate state
+    (per-cell residual variance, open episodes, screened/evaluated
+    counters) and every host/device RNG (including the dedicated screen
+    streams) — is atomically checkpointed every ``checkpoint_every``
+    dispatches.
     ``resume=True`` restarts from the latest checkpoint and is exact: a
     killed-and-resumed run reproduces the uninterrupted run bit-for-bit
     (test-enforced).
@@ -303,6 +335,14 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
                                          seed=sc.seed + 2)
     buf = PERBuffer(SAC_STATE_DIM, act.N_CONT, act.N_DISC, seed=sc.seed)
     eps_sched = EpsilonSchedule(sc.eps0, sc.eps_min, sc.episodes)
+    # Surrogate-gated screening state.  The extra-candidate streams are
+    # DEDICATED rngs/keys (never the main ones): the base action stream must
+    # stay aligned with the ungated path, so a run whose gates never open is
+    # bitwise identical to surrogate_gate=False (test-enforced).
+    gate = sur_mod.ScreenGate.create(n_cells, sc.gate_threshold)
+    gate_on = bool(sc.surrogate_gate) and sc.screen_k > 1
+    screen_rng = np.random.default_rng(sc.seed + 7919)
+    screen_key = jax.random.PRNGKey(sc.seed + 7919)
     archives = [ParetoArchive() for _ in range(n_cells)]
     traces: List[List[TracePoint]] = [[] for _ in range(n_cells)]
     seen: List[set] = [set() for _ in range(n_cells)]
@@ -334,6 +374,17 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
                 f"(high_perf={ex['high_perf']}, seed={ex['seed']}); got "
                 f"{list(node_nms)} x{lanes} @{sc.episodes} "
                 f"(high_perf={high_perf}, seed={sc.seed})")
+        gc = ex.get("gate_cfg")
+        if gc is not None and (
+                bool(gc["surrogate_gate"]) != bool(sc.surrogate_gate)
+                or int(gc["screen_k"]) != sc.screen_k
+                or float(gc["gate_threshold"]) != sc.gate_threshold):
+            raise ValueError(
+                f"checkpoint in {checkpoint_dir} was written with gate "
+                f"settings {gc}; got surrogate_gate={sc.surrogate_gate}, "
+                f"screen_k={sc.screen_k}, gate_threshold="
+                f"{sc.gate_threshold} — resuming with different gate "
+                "settings would break bit-exact resume")
         sac_state = _unflatten_from(flat, "device/sac", sac_state)
         wm_state = _unflatten_from(flat, "device/wm", wm_state)
         surrogate.params = _unflatten_from(flat, "device/sur_params",
@@ -372,6 +423,15 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
         no_improve = int(ex["no_improve"])
         last_entropy = float(ex["last_entropy"])
         eps_sched.eps = float(ex["eps"])
+        if "gate" in ex:
+            gate = sur_mod.ScreenGate.from_dict(ex["gate"])
+            screen_rng = _restore_np_rng(ex["screen_rng"])
+            screen_key = jnp.asarray(flat["device/screen_key"])
+        else:
+            # legacy (pre-gate) checkpoint: the original run was ungated,
+            # and ungated == gated-with-closed-gates bitwise — finish the
+            # run ungated so resume stays bit-exact with that run
+            gate_on = False
         start_t = int(manifest["step"])
         t_env = start_t * lanes
         resumed = True
@@ -385,7 +445,8 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
         tree = dict(
             device=dict(sac=sac_state, wm=wm_state,
                         sur_params=surrogate.params,
-                        sur_opt=surrogate.opt_state, key=np.asarray(key)),
+                        sur_opt=surrogate.opt_state, key=np.asarray(key),
+                        screen_key=np.asarray(screen_key)),
             host=dict(
                 per_s=buf.s, per_a_cont=buf.a_cont, per_a_disc=buf.a_disc,
                 per_r=buf.r, per_s2=buf.s2, per_done=buf.done,
@@ -422,7 +483,11 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
             best_has=[best[c][1] is not None for c in range(n_cells)],
             best_score=[float(best[c][0]) for c in range(n_cells)],
             feasible_count=feasible_count.tolist(), no_improve=no_improve,
-            last_entropy=last_entropy)
+            last_entropy=last_entropy, gate=gate.to_dict(),
+            gate_cfg=dict(surrogate_gate=bool(sc.surrogate_gate),
+                          screen_k=sc.screen_k,
+                          gate_threshold=sc.gate_threshold),
+            screen_rng=screen_rng.bit_generator.state)
         _save_search_ckpt(checkpoint_dir, t_next, tree, extra)
 
     for t in range(start_t, n_steps):
@@ -444,6 +509,31 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
         explore = rng.random(b) < eps_sched.eps
         a_c = np.where(explore[:, None], a_c_rand, a_c_pol).astype(np.float32)
         a_d = np.where(explore[:, None], a_d_rand, a_d_pol).astype(np.int32)
+        # ---- surrogate-gated screening (Eq. 67): K candidates per env,
+        # surrogate scores them in one fused call, the top-1 survivor gets
+        # the analytic evaluation.  Candidate 0 is the exact ungated action;
+        # extra candidates draw from the dedicated screen streams, so cells
+        # whose gate is closed keep the ungated action stream untouched.
+        if gate_on and gate.open.any():
+            kk = sc.screen_k
+            cand_c = np.empty((b, kk, act.N_CONT), np.float32)
+            cand_d = np.empty((b, kk, act.N_DISC), np.int32)
+            cand_c[:, 0], cand_d[:, 0] = a_c, a_d
+            screen_key, k_scr = jax.random.split(screen_key)
+            p_c, p_d = sac_mod.policy_act_batch(
+                sac_state.params.actor,
+                jnp.asarray(np.repeat(s, kk - 1, axis=0)), k_scr)
+            r_c, r_d = act.random_action_batch(screen_rng, b * (kk - 1))
+            expl = screen_rng.random(b * (kk - 1)) < eps_sched.eps
+            cand_c[:, 1:] = np.where(expl[:, None], r_c,
+                                     np.asarray(p_c)).reshape(b, kk - 1, -1)
+            cand_d[:, 1:] = np.where(expl[:, None], r_d,
+                                     np.asarray(p_d)).reshape(b, kk - 1, -1)
+            pick = np.asarray(sur_mod.screen_batch(
+                surrogate.params, jnp.asarray(s), jnp.asarray(cand_c),
+                env.weights, jnp.asarray(np.repeat(gate.open, lanes))))
+            a_c = cand_c[np.arange(b), pick]
+            a_d = cand_d[np.arange(b), pick]
         # ---- env transition: one fused dispatch for B env-steps ----------
         s2, r, info = env.step(a_c, a_d)
         buf.add_batch(s, a_c, a_d, r, s2, np.zeros(b, np.float32))
@@ -470,6 +560,18 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
                 seen[c].add(_cfg_key(info.cfg[i]))
         t_env += lanes
         no_improve = 0 if improved else no_improve + lanes
+        # ---- gate accounting + online per-cell calibration (Eq. 66) ------
+        if gate_on:
+            gate.count(lanes, sc.screen_k)
+            # calibration only matters while some gate can still open
+            # (the gate is monotone): skip the dead work once all are open
+            if surrogate.n_updates > 0 and not gate.open.all():
+                errs = np.asarray(sur_mod.calib_errors(
+                    surrogate.params, jnp.asarray(sur_x[-1]),
+                    jnp.asarray(info.metrics)))
+                gate.observe(errs.reshape(n_cells, lanes).mean(axis=1), t_env)
+        else:
+            gate.count(lanes, 1)
         # ---- learn (Alg. 1 l.12-13) --------------------------------------
         if buf.size >= max(sc.batch_size, min(sc.warmup, sc.episodes // 4)):
             for _ in range(sc.updates_per_dispatch):
@@ -544,7 +646,11 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
                         if best_metrics is not None else float("inf")),
             archive=archives[c], trace=traces[c], hetero=hetero,
             episodes_run=t_env, feasible_count=int(feasible_count[c]),
-            unique_configs=len(seen[c]), wall_s=wall))
+            unique_configs=len(seen[c]), wall_s=wall,
+            gate_open_episode=(int(gate.open_at[c])
+                               if gate.open_at[c] >= 0 else None),
+            screened=int(gate.screened[c]),
+            evaluated=int(gate.evaluated[c])))
     return results
 
 
@@ -611,7 +717,8 @@ def run_random(workload: Workload, node_nm: int, *, high_perf: bool = True,
                                     float(m[M_IDX["tok_s"]])))
     return SearchResult("random", node_nm, best[1], best[2], float(best[0]),
                         archive, trace, None, episodes, feas_count,
-                        len(seen), time.time() - t0)
+                        len(seen), time.time() - t0,
+                        screened=episodes, evaluated=episodes)
 
 
 def run_grid(workload: Workload, node_nm: int, *, high_perf: bool = True,
@@ -653,7 +760,7 @@ def run_grid(workload: Workload, node_nm: int, *, high_perf: bool = True,
                     t += 1
     return SearchResult("grid", node_nm, best[1], best[2], float(best[0]),
                         archive, trace, None, t, feas_count, len(seen),
-                        time.time() - t0)
+                        time.time() - t0, screened=t, evaluated=t)
 
 
 def run_all_nodes(workload: Workload, nodes: Sequence[int], *,

@@ -12,6 +12,12 @@ vmapped analytic PPA (on TPU this shards over the mesh via jit — the
 ``--campaign grid.yaml`` runs a persistent multi-workload x multi-node
 campaign (``repro.campaign``) instead of a single search; ``--resume
 <run-dir>`` continues a killed campaign from its last completed chunk.
+
+``--screen-k`` / ``--gate-threshold`` / ``--no-surrogate-gate`` control
+surrogate-gated candidate screening (vec engine + campaigns): once a
+cell's surrogate calibration passes the Eq.-67 gate, K candidates are
+proposed per env-step and only the surrogate's top-1 survivor pays a full
+analytic PPA evaluation.
 """
 from __future__ import annotations
 
@@ -51,16 +57,25 @@ def result_row(res: SearchResult) -> Dict:
 def run(arch: str, *, nodes: List[int], mode: str, episodes: int,
         method: str, out_dir: str, seed: int = 0, seq_len: int = 2048,
         batch: int = 3, update_every: int = 1, verbose: bool = False,
-        engine: str = "scalar", n_envs: int = 64) -> List[Dict]:
+        engine: str = "scalar", n_envs: int = 64,
+        surrogate_gate: bool = True, screen_k: Optional[int] = None,
+        gate_threshold: Optional[float] = None) -> List[Dict]:
     cfg = get_config(arch)
     high_perf = mode == "high-performance"
     wl = extract(cfg, seq_len=seq_len, batch=batch)
     os.makedirs(out_dir, exist_ok=True)
+    # None = SearchConfig's defaults own the gate settings
+    gate_kw = dict(surrogate_gate=surrogate_gate)
+    if screen_k is not None:
+        gate_kw["screen_k"] = screen_k
+    if gate_threshold is not None:
+        gate_kw["gate_threshold"] = gate_threshold
     rows = []
     for node in nodes:
         if method == "sac":
             sc = SearchConfig(episodes=episodes, seed=seed,
-                              update_every=update_every, verbose=verbose)
+                              update_every=update_every, verbose=verbose,
+                              **gate_kw)
             if engine == "vec":
                 res = run_search(wl, node, high_perf=high_perf, search=sc,
                                  n_envs=n_envs)
@@ -107,6 +122,23 @@ def validate_args(ap: argparse.ArgumentParser,
         ap.error(f"--engine vec only drives the SAC search loop; "
                  f"--method {a.method} runs on the scalar evaluator "
                  "(drop --engine vec)")
+    gate_flags = [n for n, v in (("--screen-k", a.screen_k),
+                                 ("--gate-threshold", a.gate_threshold))
+                  if v is not None]
+    if a.no_surrogate_gate:
+        gate_flags.append("--no-surrogate-gate")
+    if a.screen_k is not None and a.screen_k < 1:
+        ap.error(f"--screen-k must be >= 1 (got {a.screen_k})")
+    if a.gate_threshold is not None and a.gate_threshold < 0:
+        ap.error(f"--gate-threshold must be >= 0 (got {a.gate_threshold})")
+    if gate_flags and a.resume:
+        ap.error(f"{'/'.join(gate_flags)}: a resumed campaign keeps the "
+                 "gate settings recorded in its manifest; start a new "
+                 "campaign to change them")
+    if gate_flags and not a.campaign and a.engine != "vec":
+        ap.error(f"{'/'.join(gate_flags)} applies to --engine vec or "
+                 "--campaign runs; the scalar engine has no surrogate "
+                 "screening gate")
     if a.campaign and a.resume:
         ap.error("--campaign starts a new run and --resume continues an "
                  "existing one; pass exactly one")
@@ -137,6 +169,18 @@ def main(argv: Optional[List[str]] = None) -> None:
                          "parallel episodes per jit dispatch")
     ap.add_argument("--n-envs", type=int, default=64,
                     help="environments per dispatch for --engine vec")
+    ap.add_argument("--screen-k", type=int, default=None,
+                    help="candidate actions proposed per env-step once the "
+                         "surrogate gate opens; only the surrogate's top-1 "
+                         "survivor gets a full analytic evaluation "
+                         "(default 4)")
+    ap.add_argument("--gate-threshold", type=float, default=None,
+                    help="Eq.-67 per-cell residual-variance threshold below "
+                         "which surrogate screening activates (default 0.05)")
+    ap.add_argument("--no-surrogate-gate", action="store_true",
+                    help="disable surrogate-gated screening: every candidate "
+                         "pays a full analytic evaluation (pre-gate behavior "
+                         "is identical either way)")
     ap.add_argument("--campaign", default="",
                     help="grid spec (.yaml/.json): run a full multi-workload"
                          " x multi-node campaign instead of a single search")
@@ -148,11 +192,24 @@ def main(argv: Optional[List[str]] = None) -> None:
     a = ap.parse_args(argv)
     validate_args(ap, a)
     if a.campaign or a.resume:
+        import dataclasses
         from repro.campaign import CampaignSpec, run_campaign
         if a.resume:
             run_campaign(a.resume, resume=True)
         else:
-            spec = CampaignSpec.from_file(a.campaign)
+            try:
+                spec = CampaignSpec.from_file(a.campaign)
+            except (ValueError, TypeError, RuntimeError, OSError) as e:
+                ap.error(f"--campaign {a.campaign}: {e}")
+            overrides = {}
+            if a.screen_k is not None:
+                overrides["screen_k"] = a.screen_k
+            if a.gate_threshold is not None:
+                overrides["gate_threshold"] = a.gate_threshold
+            if a.no_surrogate_gate:
+                overrides["surrogate_gate"] = False
+            if overrides:
+                spec = dataclasses.replace(spec, **overrides)
             run_campaign(os.path.join(a.campaign_root, spec.name), spec)
         return
     nodes = list(NODES) if a.nodes == "all" else [
@@ -160,7 +217,9 @@ def main(argv: Optional[List[str]] = None) -> None:
     run(a.arch, nodes=nodes, mode=a.mode, episodes=a.episodes,
         method=a.method, out_dir=a.out, seed=a.seed, seq_len=a.seq_len,
         batch=a.batch, update_every=a.update_every, verbose=a.verbose,
-        engine=a.engine, n_envs=a.n_envs)
+        engine=a.engine, n_envs=a.n_envs,
+        surrogate_gate=not a.no_surrogate_gate,
+        screen_k=a.screen_k, gate_threshold=a.gate_threshold)
 
 
 if __name__ == "__main__":

@@ -119,3 +119,118 @@ def surrogate_reward(pred_log: jnp.ndarray) -> jnp.ndarray:
     """r_sur = P_perf - 0.3 P_pwr - 0.2 P_area (paper §3.16 MPC reward),
     on log1p-scaled heads for stability."""
     return pred_log[..., 1] - 0.3 * pred_log[..., 0] - 0.2 * pred_log[..., 2]
+
+
+# ---------------------------------------------------------------------------
+# Surrogate-gated candidate screening (campaign search path)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def screen_batch(params: Dict, s: jnp.ndarray, cand: jnp.ndarray,
+                 weights: jnp.ndarray, open_mask: jnp.ndarray) -> jnp.ndarray:
+    """Score K candidate actions per env and pick the surrogate-best.
+
+    s: (B, S) states; cand: (B, K, N_CONT) candidate continuous actions
+    (candidate 0 is the action the ungated path would take); weights: (B, 3)
+    normalized (w_perf, w_power, w_area); open_mask: (B,) bool per-env gate.
+
+    The score is the surrogate's scalarized PPA proxy in log1p space
+    (lower = better, mirroring ppa_score's direction):
+    w_power * log1p(power) + w_area * log1p(area) - w_perf * log1p(perf).
+    Where the gate is closed the base candidate (index 0) is returned, so a
+    closed gate is exactly the ungated action stream.
+    """
+    bsz, k = cand.shape[0], cand.shape[1]
+    x = jnp.concatenate(
+        [jnp.broadcast_to(s[:, None, :], (bsz, k, s.shape[-1])), cand],
+        axis=-1)
+    pred = predict(params, x)                                   # (B, K, 3)
+    score = (weights[:, None, 1] * pred[..., 0]
+             + weights[:, None, 2] * pred[..., 2]
+             - weights[:, None, 0] * pred[..., 1])
+    return jnp.where(open_mask, jnp.argmin(score, axis=1), 0)
+
+
+@jax.jit
+def calib_errors(params: Dict, x: jnp.ndarray,
+                 metrics: jnp.ndarray) -> jnp.ndarray:
+    """Per-sample surrogate residual (Eq. 66 numerator) on evaluated points.
+
+    x: (B, in_dim) [state||action]; metrics: (B, M_DIM) analytic outcomes.
+    Returns (B,) mean-squared error over the 3 log1p targets — the online
+    calibration signal the per-cell Eq.-67 gate integrates.
+    """
+    pred = predict(params, x)
+    y = targets_from_metrics(metrics)
+    return jnp.mean((pred - y) ** 2, axis=-1)
+
+
+@dataclasses.dataclass
+class ScreenGate:
+    """Per-cell Eq.-66/67 gate state for surrogate-gated screening.
+
+    Tracks one running residual variance per search cell (EMA of the
+    surrogate's calibration error on that cell's analytically evaluated
+    points).  A cell's gate *opens* — and stays open — the first time its
+    residual variance drops below ``tau`` (Eq. 67, per cell); from then on
+    candidate actions for that cell are screened through the surrogate and
+    only the survivor pays a full analytic evaluation.
+
+    ``screened`` counts candidates considered (K per env-step once open,
+    1 before), ``evaluated`` counts full analytic evaluations; their ratio
+    is the "effective episodes per analytic evaluation" multiplier that
+    ``benchmarks/bench_gated_campaign`` regresses on.
+    """
+    tau: float
+    resid_var: np.ndarray      # (n_cells,) EMA residual variance, init inf
+    open_at: np.ndarray        # (n_cells,) env-step the gate opened; -1 closed
+    screened: np.ndarray       # (n_cells,) candidates scored
+    evaluated: np.ndarray      # (n_cells,) full analytic evaluations
+    ema: float = 0.95          # same EMA horizon as Surrogate.update
+
+    @classmethod
+    def create(cls, n_cells: int, tau: float = TAU_SUR_DEFAULT
+               ) -> "ScreenGate":
+        return cls(tau=float(tau),
+                   resid_var=np.full(n_cells, np.inf, np.float64),
+                   open_at=np.full(n_cells, -1, np.int64),
+                   screened=np.zeros(n_cells, np.int64),
+                   evaluated=np.zeros(n_cells, np.int64))
+
+    @property
+    def open(self) -> np.ndarray:
+        """(n_cells,) bool — which cells' gates are open."""
+        return self.open_at >= 0
+
+    def observe(self, err_per_cell: np.ndarray, t_env: int) -> None:
+        """Fold one dispatch's per-cell calibration error into the EMA and
+        open any cell whose variance just passed below tau (Eq. 67)."""
+        err = np.asarray(err_per_cell, np.float64)
+        first = ~np.isfinite(self.resid_var)
+        self.resid_var = np.where(
+            first, err, self.ema * self.resid_var + (1.0 - self.ema) * err)
+        newly = (~self.open) & (self.resid_var < self.tau)
+        self.open_at[newly] = t_env
+
+    def count(self, lanes: int, k: int) -> None:
+        """Account one dispatch: every env pays one analytic evaluation;
+        open cells screened k candidates per lane, closed cells one."""
+        self.evaluated += lanes
+        self.screened += np.where(self.open, lanes * k, lanes)
+
+    # ------------------------------------------------- checkpoint (de)serde
+    def to_dict(self) -> Dict:
+        return dict(tau=self.tau, ema=self.ema,
+                    resid_var=[float(v) for v in self.resid_var],
+                    open_at=self.open_at.tolist(),
+                    screened=self.screened.tolist(),
+                    evaluated=self.evaluated.tolist())
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ScreenGate":
+        return cls(tau=float(d["tau"]), ema=float(d["ema"]),
+                   resid_var=np.array([float(v) for v in d["resid_var"]],
+                                      np.float64),
+                   open_at=np.asarray(d["open_at"], np.int64),
+                   screened=np.asarray(d["screened"], np.int64),
+                   evaluated=np.asarray(d["evaluated"], np.int64))

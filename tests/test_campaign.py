@@ -58,6 +58,21 @@ def test_spec_validation():
         CampaignSpec(name="x", workloads=[ARCH], lanes=64, max_envs=8)
     with pytest.raises(ValueError, match="unknown campaign spec keys"):
         CampaignSpec.from_dict(dict(name="x", workloads=[ARCH], nope=1))
+    with pytest.raises(ValueError, match="screen_k"):
+        CampaignSpec(name="x", workloads=[ARCH], screen_k=0)
+    with pytest.raises(ValueError, match="gate_threshold"):
+        CampaignSpec(name="x", workloads=[ARCH], gate_threshold=-0.1)
+
+
+def test_spec_from_dict_names_bad_and_missing_keys():
+    """A grid-file typo must produce an error naming the bad key (with a
+    did-you-mean hint), not a silently empty/garbled grid."""
+    with pytest.raises(ValueError) as ei:
+        CampaignSpec.from_dict(dict(name="x", worklaods=[ARCH]))
+    msg = str(ei.value)
+    assert "worklaods" in msg and "did you mean 'workloads'?" in msg
+    with pytest.raises(ValueError, match="missing required"):
+        CampaignSpec.from_dict(dict(name="x"))
 
 
 # ------------------------------------------------------------------ store
@@ -182,6 +197,55 @@ def test_campaign_midbatch_checkpoint_resume_exact(tmp_path, monkeypatch):
             assert np.array_equal(np.sort(f1[k]), np.sort(f2[k])), (cid, k)
 
 
+def test_campaign_gate_open_kill_resume_exact(tmp_path, monkeypatch):
+    """Kill mid-batch AFTER a checkpoint taken with the surrogate gate OPEN;
+    resume must restore the gate state (open episodes, screened/evaluated
+    counters, screen RNG streams) bit-for-bit and reproduce the
+    uninterrupted campaign exactly."""
+    # budget large enough that SAC/surrogate learning starts (buf >= 256)
+    # and the loose threshold opens every gate mid-run
+    spec = tiny_spec("gate", episodes=192, checkpoint_every=8,
+                     gate_threshold=1e9, screen_k=3)
+    ref = run_campaign(str(tmp_path / "ref"), spec, progress=lambda m: None)
+    ref_sums = ref.summaries()
+    assert all(s["gate_open_episode"] is not None
+               and s["screened"] > s["evaluated"]
+               for s in ref_sums.values()), \
+        "reference run never opened its gates; test budget too small"
+
+    real_save = search_mod._save_search_ckpt
+    saves = []
+
+    def killing_save(*args, **kw):
+        out = real_save(*args, **kw)
+        saves.append(args[1])
+        if len(saves) == 5:   # step 40 of 48: checkpoint has open gates
+            raise KeyboardInterrupt("simulated kill after gate opened")
+        return out
+
+    monkeypatch.setattr(search_mod, "_save_search_ckpt", killing_save)
+    root = str(tmp_path / "gate")
+    with pytest.raises(KeyboardInterrupt):
+        run_campaign(root, spec, progress=lambda m: None)
+    monkeypatch.setattr(search_mod, "_save_search_ckpt", real_save)
+    store = run_campaign(root, resume=True, progress=lambda m: None)
+
+    assert store.all_done()
+    for cid, s_ref in ref_sums.items():
+        s = store.load_summary(cid)
+        for k in ("ppa_score", "episodes", "gate_open_episode", "screened",
+                  "evaluated"):
+            assert s[k] == s_ref[k], (cid, k, s[k], s_ref[k])
+        # the manifest cell record carries the gate counters too
+        rec = store.manifest["cells"][cid]
+        assert rec["screened"] == s_ref["screened"]
+        assert rec["gate_open_episode"] == s_ref["gate_open_episode"]
+        f1 = ref.load_archive(cid).frontier()
+        f2 = store.load_archive(cid).frontier()
+        for k in f1:
+            assert np.array_equal(np.sort(f1[k]), np.sort(f2[k])), (cid, k)
+
+
 def test_campaign_reports(tmp_path):
     spec = tiny_spec("rep")
     store = run_campaign(str(tmp_path / "rep"), spec,
@@ -222,6 +286,30 @@ def test_cli_rejects_bad_combos(capsys):
     with pytest.raises(SystemExit):
         dse.main(["--resume", "/does/not/exist"])
     assert "manifest" in capsys.readouterr().err
+
+
+def test_cli_campaign_grid_typo_clean_error(tmp_path, capsys):
+    grid = tmp_path / "bad.json"
+    grid.write_text(json.dumps(dict(name="typo", worklaods=[ARCH])))
+    with pytest.raises(SystemExit):
+        dse.main(["--campaign", str(grid)])
+    err = capsys.readouterr().err
+    assert "worklaods" in err and "did you mean 'workloads'?" in err
+
+
+def test_cli_rejects_bad_gate_flags(capsys):
+    with pytest.raises(SystemExit):
+        dse.main(["--screen-k", "4"])     # scalar engine: no gate
+    assert "--engine vec" in capsys.readouterr().err
+    with pytest.raises(SystemExit):
+        dse.main(["--engine", "vec", "--screen-k", "0"])
+    assert "--screen-k must be >= 1" in capsys.readouterr().err
+    with pytest.raises(SystemExit):
+        dse.main(["--engine", "vec", "--gate-threshold", "-1"])
+    assert "--gate-threshold" in capsys.readouterr().err
+    with pytest.raises(SystemExit):
+        dse.main(["--resume", "/does/not/exist", "--no-surrogate-gate"])
+    assert "start a new campaign" in capsys.readouterr().err
 
 
 def test_cli_campaign_end_to_end(tmp_path):

@@ -1,0 +1,162 @@
+"""Surrogate-gated candidate screening (Eq. 66-67): gate state, batched
+screening/calibration kernels, and the gated `run_search_cells` path —
+including the contract that a run whose gates never open is bitwise
+identical to `surrogate_gate=False` (the pre-gate engine)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.search import SearchConfig, run_search_cells
+from repro.ppa import surrogate as sur_mod
+from repro.workload.extract import extract
+
+ARCH = "smollm-135m"
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return extract(get_config(ARCH), seq_len=256, batch=1)
+
+
+def small_sc(**kw):
+    """Budget small enough for tier-1, learning early enough that the
+    surrogate trains (and the gate can open) within the run."""
+    base = dict(episodes=96, warmup=32, batch_size=32, surrogate_every=4,
+                seed=0)
+    base.update(kw)
+    return SearchConfig(**base)
+
+
+# ------------------------------------------------------------ gate state
+def test_screen_gate_open_and_counters():
+    g = sur_mod.ScreenGate.create(3, tau=0.5)
+    assert not g.open.any() and np.all(np.isinf(g.resid_var))
+    g.count(lanes=4, k=5)                       # all gates closed: 1 cand/env
+    assert g.evaluated.tolist() == [4, 4, 4]
+    assert g.screened.tolist() == [4, 4, 4]
+    g.observe(np.array([0.4, 0.9, 0.4]), t_env=12)   # first obs sets EMA
+    assert g.open.tolist() == [True, False, True]
+    assert g.open_at.tolist() == [12, -1, 12]
+    g.count(lanes=4, k=5)                       # open cells screen k/env
+    assert g.screened.tolist() == [24, 8, 24]
+    assert g.evaluated.tolist() == [8, 8, 8]
+    # gate is monotone: a later noisy residual does not close it
+    g.observe(np.array([9.9, 9.9, 9.9]), t_env=16)
+    assert g.open.tolist() == [True, False, True]
+    assert g.open_at.tolist() == [12, -1, 12]
+
+
+def test_screen_gate_serde_roundtrip():
+    g = sur_mod.ScreenGate.create(2, tau=0.25)
+    g.count(4, 3)
+    g.observe(np.array([0.1, np.inf]), t_env=8)
+    g2 = sur_mod.ScreenGate.from_dict(
+        # json round-trip like the checkpoint extra (inf -> "inf" -> float)
+        {k: ([str(x) if isinstance(x, float) and not np.isfinite(x) else x
+              for x in v] if isinstance(v, list) else v)
+         for k, v in g.to_dict().items()})
+    assert g2.tau == g.tau
+    assert np.array_equal(g2.open_at, g.open_at)
+    assert np.array_equal(g2.screened, g.screened)
+    assert np.array_equal(g2.evaluated, g.evaluated)
+    assert g2.resid_var[0] == g.resid_var[0] and np.isinf(g2.resid_var[1])
+
+
+# ---------------------------------------------------- screening kernels
+def test_screen_batch_picks_surrogate_best():
+    b, k, sdim = 6, 4, 52
+    in_dim = sdim + 30
+    params = sur_mod.init_params(jax.random.PRNGKey(0), in_dim)
+    rng = np.random.default_rng(0)
+    s = rng.normal(size=(b, sdim)).astype(np.float32)
+    cand = rng.uniform(-1, 1, size=(b, k, 30)).astype(np.float32)
+    w = np.tile(np.array([[0.4, 0.4, 0.2]], np.float32), (b, 1))
+    closed = np.asarray(sur_mod.screen_batch(
+        params, jnp.asarray(s), jnp.asarray(cand), jnp.asarray(w),
+        jnp.zeros(b, bool)))
+    assert np.array_equal(closed, np.zeros(b))   # closed gate = base action
+    picked = np.asarray(sur_mod.screen_batch(
+        params, jnp.asarray(s), jnp.asarray(cand), jnp.asarray(w),
+        jnp.ones(b, bool)))
+    # manual re-score
+    x = np.concatenate([np.repeat(s[:, None], k, axis=1), cand], axis=-1)
+    pred = np.asarray(sur_mod.predict(params, jnp.asarray(x)))
+    score = (w[:, None, 1] * pred[..., 0] + w[:, None, 2] * pred[..., 2]
+             - w[:, None, 0] * pred[..., 1])
+    assert np.array_equal(picked, np.argmin(score, axis=1))
+
+
+def test_calib_errors_matches_loss_scale():
+    in_dim, m = 82, 6
+    params = sur_mod.init_params(jax.random.PRNGKey(1), in_dim)
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(m, in_dim)).astype(np.float32)
+    from repro.ppa.analytic import M_DIM
+    metrics = np.abs(rng.normal(size=(m, M_DIM))).astype(np.float32)
+    errs = np.asarray(sur_mod.calib_errors(params, jnp.asarray(x),
+                                           jnp.asarray(metrics)))
+    assert errs.shape == (m,) and np.all(errs >= 0)
+    # mean of per-sample errors == the (unweighted) training loss / targets
+    loss = float(sur_mod.loss_fn(params, jnp.asarray(x),
+                                 sur_mod.targets_from_metrics(
+                                     jnp.asarray(metrics))))
+    assert np.isclose(errs.mean(), loss / sur_mod.N_TARGETS, rtol=1e-5)
+
+
+# ------------------------------------------------------- gated search path
+def test_gate_disabled_bitwise_equals_never_open(wl):
+    """surrogate_gate=False must be bitwise identical to a gated run whose
+    threshold never opens (tau=0): the gate machinery is a pure no-op until
+    Eq. 67 passes."""
+    r_off = run_search_cells(wl, [3, 7], search=small_sc(surrogate_gate=False),
+                             lanes_per_cell=4)
+    r_closed = run_search_cells(wl, [3, 7],
+                                search=small_sc(gate_threshold=0.0),
+                                lanes_per_cell=4)
+    for a, b in zip(r_off, r_closed):
+        assert a.best_score == b.best_score
+        assert np.array_equal(a.best_cfg, b.best_cfg)
+        assert np.array_equal(a.best_metrics, b.best_metrics)
+        assert a.trace == b.trace
+        fa, fb = a.archive.frontier(), b.archive.frontier()
+        for k in fa:
+            assert np.array_equal(fa[k], fb[k]), k
+        assert b.gate_open_episode is None
+        # ungated accounting: every candidate paid an analytic evaluation
+        assert a.screened == a.evaluated == a.episodes_run
+        assert b.screened == b.evaluated == b.episodes_run
+
+
+def test_resume_rejects_changed_gate_settings(wl, tmp_path):
+    """Resuming a checkpoint with different gate settings would silently
+    break bit-exact resume; it must be rejected up front."""
+    d = str(tmp_path / "ck")
+    run_search_cells(wl, [3], search=small_sc(episodes=32), lanes_per_cell=4,
+                     checkpoint_dir=d, checkpoint_every=2)
+    for bad in (dict(screen_k=8), dict(surrogate_gate=False),
+                dict(gate_threshold=0.5)):
+        with pytest.raises(ValueError, match="gate settings"):
+            run_search_cells(wl, [3], search=small_sc(episodes=32, **bad),
+                             lanes_per_cell=4, checkpoint_dir=d,
+                             checkpoint_every=0, resume=True)
+
+
+def test_gate_opens_and_saves_evaluations(wl):
+    """A loose threshold opens every cell's gate once the surrogate has
+    trained; screening then multiplies candidates per analytic evaluation."""
+    res = run_search_cells(wl, [3, 7],
+                           search=small_sc(gate_threshold=1e9, screen_k=4),
+                           lanes_per_cell=4)
+    for r in res:
+        assert r.gate_open_episode is not None
+        assert r.evaluated == r.episodes_run
+        assert r.screened > r.evaluated          # evaluations actually saved
+        # screened = evaluated + 3 extra candidates per gated env-step
+        gated_steps = r.screened - r.evaluated
+        assert gated_steps % 3 == 0
+        assert np.isfinite(r.best_score)
+        assert len(r.archive) > 0
