@@ -9,6 +9,10 @@ enforces the committed floors:
     (campaign engine vs sequential single-cell runs)
   * ``bench_gated_campaign.json`` evals_saved_ratio  >= 2x
     and ``ppa_within_tol`` (surrogate-gated screening vs ungated)
+  * ``bench_fleet.json``          speedup            >= 2.5x
+    (W=4 fleet vs W=1 at >= 8 cores; scaled by achievable parallelism
+    below that — one worker already pipelines ~2 cores, so the floor is
+    2.5 * min(W, max(1, cores // 2)) / W; see benchmarks.bench_fleet)
 
 Exit 0 iff every present table passes and none is missing.  CI runs this
 after the benchmark smoke job so the perf trajectory is regression-gated
@@ -22,13 +26,26 @@ import json
 import os
 import sys
 
+def _fleet_floor(table: dict) -> float:
+    """Core-aware fleet floor (see ``bench_fleet.scaled_floor``): full
+    2.5x where cores >= 2 * workers, scaled by the machine's ~2-core
+    worker slots elsewhere.  ``workers``/``cores`` come from the table
+    itself, recorded by ``bench_fleet`` on the machine that produced
+    it."""
+    from benchmarks.bench_fleet import scaled_floor
+    return scaled_floor(int(table.get("workers", 4)),
+                        int(table.get("cores", 1)))
+
+
 # table file -> list of (metric, floor, direction) requirements;
-# "bool" requires truthiness rather than a numeric floor.
+# "bool" requires truthiness rather than a numeric floor; a callable
+# floor is evaluated against the loaded table.
 FLOORS = {
     "bench_vec_env.json": [("speedup", 10.0, "min")],
     "bench_campaign.json": [("speedup", 3.0, "min")],
     "bench_gated_campaign.json": [("evals_saved_ratio", 2.0, "min"),
                                   ("ppa_within_tol", True, "bool")],
+    "bench_fleet.json": [("speedup", _fleet_floor, "min")],
 }
 
 
@@ -42,6 +59,8 @@ def check(tables_dir: str) -> int:
         with open(path) as f:
             table = json.load(f)
         for metric, floor, kind in reqs:
+            if callable(floor):
+                floor = floor(table)
             val = table.get(metric)
             if kind == "bool":
                 ok = bool(val)

@@ -12,8 +12,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_campaign, bench_gated_campaign,
-                            bench_vec_env, roofline, tables)
+    from benchmarks import (bench_campaign, bench_fleet,
+                            bench_gated_campaign, bench_vec_env, roofline,
+                            tables)
     from benchmarks.common import BENCH_EPISODES, emit
 
     print(f"# repro benchmarks (episodes/node={BENCH_EPISODES})")
@@ -33,6 +34,7 @@ def main() -> None:
         ("vec_env", bench_vec_env.bench_rows),
         ("campaign", bench_campaign.bench_rows),
         ("gated_campaign", bench_gated_campaign.bench_rows),
+        ("fleet", bench_fleet.bench_rows),
     ]
     failures = 0
     t_start = time.time()

@@ -12,16 +12,24 @@ campaigns over the grid (workload in the config zoo) x (process node) x
 * :mod:`repro.campaign.store`   — JSONL run directory under
   ``experiments/campaigns/<name>/`` with a manifest (git sha, seed, budget,
   cell status) and dominance-filtered archive merging.
-* :mod:`repro.campaign.report`  — per-cell best-PPA tables and the
-  cross-node adaptation table (JSON + markdown).
+* :mod:`repro.campaign.report`  — per-cell best-PPA tables, the cross-node
+  adaptation table (JSON + markdown) and, for fleets, the per-worker
+  utilization table.
+* :mod:`repro.campaign.distrib` — multi-worker fleets: deterministic batch
+  sharding, shared-nothing worker loops under ``worker-<i>/``, and the
+  crash-safe manifest reconciler that merges worker run directories into
+  the top-level frontier.
 
-CLI: ``python -m repro.launch.dse --campaign grid.yaml`` /
+CLI: ``python -m repro.launch.dse --campaign grid.yaml [--workers W]`` /
 ``--resume <run-dir>`` (see ROADMAP.md for the run-directory layout).
 """
 from repro.campaign.planner import Cell, CellBatch, CampaignSpec, plan
 from repro.campaign.runner import run_campaign
 from repro.campaign.store import CampaignStore, merge_runs
 from repro.campaign.report import write_reports
+from repro.campaign.distrib import (fingerprint, reconcile, run_worker,
+                                    shard_batches)
 
 __all__ = ["Cell", "CellBatch", "CampaignSpec", "plan", "run_campaign",
-           "CampaignStore", "merge_runs", "write_reports"]
+           "CampaignStore", "merge_runs", "write_reports", "fingerprint",
+           "reconcile", "run_worker", "shard_batches"]

@@ -1,0 +1,349 @@
+"""Distributed campaign fleets: shard cell batches across shared-nothing
+workers and reconcile their run directories into one frontier.
+
+A fleet run of campaign ``<root>`` lays out::
+
+    <root>/manifest.json           top-level manifest: spec + every cell +
+                                   the ``fleet`` block (worker count, the
+                                   deterministic batch -> worker deal,
+                                   per-worker stats after reconcile)
+    <root>/worker-<i>/             one full CampaignStore per worker:
+        manifest.json              only the worker's dealt cells
+        cells/<cell_id>.jsonl      the worker's frontier points + summaries
+        ckpt/<batch_id>/           the worker's in-flight search checkpoints
+        worker.log                 the worker process's output
+    <root>/cells/<cell_id>.jsonl   reconciled archives (merge_runs union)
+    <root>/report/                 tables incl. per-worker utilization
+
+Workers are shared-nothing: each runs its own ``run_search_cells`` loop
+over its dealt batches, exactly like a single-process campaign restricted
+to those batches.  Batch seeds derive from the GLOBAL batch index, so a
+W-worker fleet reproduces the W=1 campaign bit-for-bit (test-enforced in
+``tests/test_fleet.py``).  The deal itself (:func:`shard_batches`) is a
+pure function of the sorted batch ids — order-independent and stable
+across resumes.
+
+``reconcile`` merges worker manifests and archives into the top-level
+store: dominance-filtered point union via :func:`~repro.campaign.store.
+merge_runs`, summary copy for newly completed cells, then ONE atomic
+manifest write — JSONL first, manifest second, so a reconcile interrupted
+mid-write leaves the previous manifest valid and a re-run is idempotent.
+
+Everything here is process-agnostic and host-shardable: a worker needs
+only the shared run directory (``run_worker(root, i)``).  The launcher
+that actually spawns local worker processes lives in
+``repro.launch.fleet``.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import shutil
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.campaign.planner import CampaignSpec, CellBatch, plan
+from repro.campaign.store import (STATUS_DONE, CampaignStore, _git_sha,
+                                  merge_runs)
+
+# manifest["cells"][cid] / summary keys that legitimately differ between
+# two bit-identical runs (wall clock, scheduling) — excluded from
+# fingerprints and reconciliation equality checks.
+VOLATILE_KEYS = ("completed", "wall_s", "batch", "worker")
+
+
+# --------------------------------------------------------------- sharding
+def shard_batches(batches: List[CellBatch], workers: int
+                  ) -> Dict[int, List[CellBatch]]:
+    """Deal batches to workers: sort by batch_id, then round-robin.
+
+    Deterministic and order-independent (the sort makes the deal a pure
+    function of the batch SET), and balanced to within one batch per
+    worker.  Workers that receive no batches are absent from the result.
+    """
+    if workers < 1:
+        raise ValueError(f"workers must be >= 1 (got {workers})")
+    out: Dict[int, List[CellBatch]] = {}
+    for i, b in enumerate(sorted(batches, key=lambda b: b.batch_id)):
+        out.setdefault(i % workers, []).append(b)
+    return out
+
+
+def worker_root(root: str, idx: int) -> str:
+    return os.path.join(root, f"worker-{idx}")
+
+
+def worker_roots(root: str) -> List[str]:
+    """Existing worker run directories (those holding a manifest)."""
+    return sorted(r for r in glob.glob(os.path.join(root, "worker-*"))
+                  if os.path.isfile(os.path.join(r, "manifest.json")))
+
+
+def pending_batches(store: CampaignStore) -> List[CellBatch]:
+    """Batches with at least one cell not yet ``done`` in the manifest."""
+    return [b for b in plan(store.spec)
+            if any(store.status(c) != STATUS_DONE for c in b.cells)]
+
+
+# ------------------------------------------------------------- fleet plan
+def create_fleet(root: str, spec: CampaignSpec, workers: int
+                 ) -> CampaignStore:
+    """Create the top-level store + record the deterministic deal."""
+    store = CampaignStore.create(root, spec)
+    assign = shard_batches(plan(spec), workers)
+    store.manifest["fleet"] = dict(
+        workers=workers, started_ts=time.time(),
+        assignments={b.batch_id: w for w, bs in assign.items() for b in bs})
+    store.save_manifest()
+    return store
+
+
+def plan_resume(root: str, workers: Optional[int] = None) -> CampaignStore:
+    """Fleet-scope resume: reconcile what every prior worker finished,
+    re-deal the still-pending batches to ``workers`` fresh worker slots,
+    and relocate any orphan in-flight checkpoints to the slot that now
+    owns the batch (so a resumed batch restores bit-for-bit).
+
+    Works on a plain single-process campaign directory too (its ``ckpt/``
+    checkpoints are adopted), which is how an existing campaign is
+    upgraded to a fleet.
+    """
+    store = CampaignStore.open(root)
+    reconcile(store)
+    # snapshot the fleet block only AFTER reconcile: it just updated
+    # wall_s / worker_stats in place, and a stale copy would clobber them
+    fleet = dict(store.manifest.get("fleet") or {})
+    workers = int(workers or fleet.get("workers") or 1)
+    todo = pending_batches(store)
+    assign = shard_batches(todo, workers)
+    assignments = {b.batch_id: w for w, bs in assign.items() for b in bs}
+    _relocate_ckpts(root, assignments)
+    _clear_stale_ckpts(root, set(assignments))
+    fleet.update(workers=workers, assignments=assignments)
+    if todo:
+        # close out the previous leg's wall clock (reconcile above wrote
+        # wall_s for it) and start a new one; busy_s accumulates across
+        # legs, so utilization = busy / (base + current leg)
+        fleet["wall_base_s"] = float(fleet.get("wall_s") or 0.0)
+        fleet["started_ts"] = time.time()
+    store.manifest["fleet"] = fleet
+    store.save_manifest()
+    return store
+
+
+def _clear_stale_ckpts(root: str, live_bids: set) -> None:
+    """Drop checkpoints of batches that are no longer dealt (completed):
+    a worker killed between its batch's last complete_cell and clear_ckpt
+    would otherwise leak the batch's search state forever, since the
+    finished batch is never re-dealt to anyone who would clear it."""
+    stale = [d for d in
+             glob.glob(os.path.join(root, "ckpt", "*")) +
+             glob.glob(os.path.join(root, "worker-*", "ckpt", "*"))
+             if os.path.isdir(d) and os.path.basename(d) not in live_bids]
+    for d in stale:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def _relocate_ckpts(root: str, assignments: Dict[str, int]) -> None:
+    """Move each pending batch's newest checkpoint into the run directory
+    of the worker the batch is now dealt to.
+
+    Candidates are the top-level ``ckpt/<batch_id>`` (single-process runs)
+    and every ``worker-*/ckpt/<batch_id>`` (dead workers).  Checkpoints of
+    one batch advance monotonically and only one worker runs a batch at a
+    time, so the highest step wins; stale copies are removed."""
+    from repro.checkpoint import manager as ckpt_mod
+    for bid, w in sorted(assignments.items()):
+        dest = os.path.join(worker_root(root, w), "ckpt", bid)
+        cands = [os.path.join(root, "ckpt", bid)] + [
+            os.path.join(r, "ckpt", bid)
+            for r in glob.glob(os.path.join(root, "worker-*"))]
+        steps = {c: s for c in cands
+                 if (s := ckpt_mod.latest_step(c)) is not None}
+        if not steps:
+            continue
+        best = max(steps, key=lambda c: (steps[c], c == dest))
+        if os.path.abspath(best) != os.path.abspath(dest):
+            if os.path.isdir(dest):
+                shutil.rmtree(dest)
+            os.makedirs(os.path.dirname(dest), exist_ok=True)
+            os.replace(best, dest)
+        for c in steps:       # losing (older) copies are dead weight
+            if os.path.abspath(c) != os.path.abspath(dest):
+                shutil.rmtree(c, ignore_errors=True)
+
+
+# ------------------------------------------------------------ worker side
+def _open_worker_store(root: str, idx: int, top: CampaignStore,
+                       batches: List[CellBatch]) -> CampaignStore:
+    """Open (or create) worker ``idx``'s store, seeded with its dealt
+    cells.  Cells the top-level manifest already records as done stay
+    done, so a re-dealt batch skips completed work like a resume does."""
+    wroot = worker_root(root, idx)
+    if os.path.isfile(os.path.join(wroot, "manifest.json")):
+        w = CampaignStore.open(wroot)
+    else:
+        os.makedirs(os.path.join(wroot, "cells"), exist_ok=True)
+        w = CampaignStore(wroot, dict(
+            name=f"{top.manifest['name']}/worker-{idx}",
+            created=time.strftime("%Y-%m-%dT%H:%M:%S"), git_sha=_git_sha(),
+            seed=top.manifest["seed"],
+            episodes_per_cell=top.manifest["episodes_per_cell"],
+            spec=top.manifest["spec"], cells={}))
+    for cid in sorted(c.cell_id for b in batches for c in b.cells):
+        rec = top.manifest["cells"].get(cid, {})
+        mine = w.manifest["cells"].get(cid, {})
+        if mine.get("status") != STATUS_DONE:
+            if rec.get("status") == STATUS_DONE:
+                # seeded from the top-level manifest: keep the provenance
+                # tag so utilization stats never credit this worker with
+                # work another worker (or a single-process run) did
+                seeded = dict(rec)
+                seeded.setdefault("worker", "upstream")
+                w.manifest["cells"][cid] = seeded
+            else:
+                w.manifest["cells"][cid] = dict(status="pending")
+    w.manifest["worker"] = dict(
+        index=idx, busy_s=float(w.manifest.get("worker", {})
+                                .get("busy_s", 0.0)))
+    w.save_manifest()
+    return w
+
+
+def run_worker(root: str, idx: int, progress=print) -> CampaignStore:
+    """One worker's whole life: run every batch the top-level manifest
+    deals to slot ``idx``, with its own checkpoints and durable per-cell
+    results under ``worker-<idx>/``.  Shared-nothing: the only cross-
+    worker state is the read-only top-level manifest."""
+    from repro.campaign.runner import execute_batch
+    top = CampaignStore.open(root)
+    fleet = top.manifest.get("fleet")
+    if not fleet:
+        raise ValueError(f"{root} is not a fleet campaign "
+                         "(no fleet block in manifest.json)")
+    mine = [b for b in plan(top.spec)
+            if fleet["assignments"].get(b.batch_id) == idx]
+    store = _open_worker_store(root, idx, top, mine)
+    for batch in mine:
+        t0 = time.time()
+        n = execute_batch(store, batch, top.spec,
+                          progress=lambda m: progress(f"[w{idx}]{m}"))
+        if n:
+            store.manifest["worker"]["busy_s"] += time.time() - t0
+            store.save_manifest()
+    progress(f"[w{idx}] done: {len(mine)} batches, "
+             f"busy {store.manifest['worker']['busy_s']:.1f}s")
+    return store
+
+
+# -------------------------------------------------------------- reconcile
+def reconcile(store: CampaignStore, progress=lambda m: None, *,
+              freeze_clock: bool = False) -> List[str]:
+    """Merge every worker run directory into the top-level store.
+
+    Atomic, idempotent, crash-safe: archive points union in with dominance
+    filtering (``merge_runs``), summaries of newly completed cells are
+    appended to the top-level JSONL, and only then is the manifest flipped
+    in ONE atomic write.  A kill anywhere mid-reconcile leaves the previous
+    manifest valid and a re-run converges to the same state (point appends
+    are dedup-guarded; a summary line can be re-appended in the window
+    before the manifest flip, which is benign — last summary wins).
+
+    ``freeze_clock=True`` ends the current wall-clock leg (the fleet
+    parent passes it when its workers have exited), so idle time between
+    a failed leg and a later ``--resume`` never dilutes utilization.
+    Returns the cell ids newly marked done."""
+    roots = worker_roots(store.root)
+    if not roots:
+        return []
+    stats = {}
+    newly_done: Dict[str, Dict] = {}
+    for r in roots:
+        w = CampaignStore.open(r)
+        widx = w.manifest.get("worker", {}).get("index")
+        done = [cid for cid, rec in w.manifest["cells"].items()
+                if rec.get("status") == STATUS_DONE]
+        # stats credit only cells this worker completed itself — records
+        # seeded from elsewhere carry a "worker" provenance tag
+        own = [cid for cid in done
+               if "worker" not in w.manifest["cells"][cid]]
+        stats[os.path.basename(r)] = dict(
+            worker=widx, cells=len(own),
+            episodes=sum(int(w.manifest["cells"][c].get("episodes") or 0)
+                         for c in own),
+            busy_s=round(float(w.manifest.get("worker", {})
+                               .get("busy_s", 0.0)), 2))
+        for cid in done:
+            if store.manifest["cells"].get(cid, {}) \
+                    .get("status") == STATUS_DONE or cid in newly_done:
+                continue
+            rec = dict(w.manifest["cells"][cid])
+            rec["worker"] = widx
+            newly_done[cid] = dict(rec=rec, summary=w.load_summary(cid))
+    # 1) archives: dominance-filtered union, appended to dst JSONL only
+    #    when they add frontier points (idempotent on re-run)
+    merge_runs(store, roots)
+    # 2) summaries for newly completed cells (skipped on re-run because
+    #    the manifest flip below already happened)
+    for cid, d in sorted(newly_done.items()):
+        if d["summary"] is not None:
+            store.append_summary(cid, d["summary"])
+    # 3) single atomic manifest write publishes the merged state
+    for cid, d in newly_done.items():
+        store.manifest["cells"][cid] = d["rec"]
+    fleet = store.manifest.setdefault("fleet", {})
+    fleet["worker_stats"] = stats
+    if fleet.get("assignments"):
+        # the deal only tracks OUTSTANDING work: completed batches drop
+        # out, so a finished fleet has an empty deal and a plain resume
+        # of it is a no-op rather than an error
+        live = {b.batch_id for b in pending_batches(store)}
+        fleet["assignments"] = {bid: w for bid, w
+                                in fleet["assignments"].items()
+                                if bid in live}
+    started = fleet.get("started_ts")
+    if started:
+        # cumulative across resume legs: wall_base_s closed out earlier
+        # legs, started_ts opened the current one
+        fleet["wall_s"] = round(float(fleet.get("wall_base_s") or 0.0)
+                                + time.time() - float(started), 2)
+        finished = not pending_batches(store)
+        if freeze_clock or finished:
+            # leg over (workers exited) or campaign finished: freeze the
+            # clock so idle calendar time before a later resume never
+            # dilutes util_pct (a SIGKILLed PARENT can still leave
+            # started_ts dangling — a lease/heartbeat is the multi-host
+            # follow-up in ROADMAP.md)
+            fleet["wall_base_s"] = fleet["wall_s"]
+            fleet.pop("started_ts")
+        if finished:
+            # drop any checkpoint a worker died too early to clear
+            _clear_stale_ckpts(store.root, set())
+    store.save_manifest()
+    if newly_done:
+        progress(f"[fleet] reconciled {len(newly_done)} cells "
+                 f"from {len(roots)} worker dirs")
+    return sorted(newly_done)
+
+
+# ------------------------------------------------------------ fingerprint
+def fingerprint(store: CampaignStore) -> Dict[str, Dict]:
+    """Deterministic digest of a campaign's merged outcome: per-cell
+    status + summary + frontier, with wall-clock noise stripped.  Two runs
+    of the same grid/seed must fingerprint identically — fleet vs single
+    process, interrupted vs not (test-enforced in ``tests/test_fleet.py``).
+    """
+    out: Dict[str, Dict] = {}
+    for cid, rec in sorted(store.manifest["cells"].items()):
+        r = {k: v for k, v in rec.items() if k not in VOLATILE_KEYS}
+        s = store.load_summary(cid)
+        if s is not None:
+            r["summary"] = {k: v for k, v in s.items()
+                            if k not in VOLATILE_KEYS}
+        fr = store.load_archive(cid).frontier()
+        r["frontier"] = sorted(zip(*(np.asarray(fr[k], np.float64).tolist()
+                                     for k in sorted(fr))))
+        out[cid] = r
+    return out

@@ -8,6 +8,9 @@
   (workload, mode), how the chosen design adapts across process nodes
   (mesh size, FETCH, VLEN, weight/data memory split, frequency, PPA) —
   the headline "one RL loop retunes itself per node" evidence.
+* ``workers``    — fleet campaigns only: per-worker utilization (cells,
+  episodes, busy seconds, busy/fleet-wall percentage), from the stats the
+  reconciler folds into the manifest's ``fleet`` block.
 """
 from __future__ import annotations
 
@@ -21,6 +24,7 @@ CELL_COLS = ("cell_id", "mesh", "fetch", "vlen", "wmem_kb", "dmem_kb",
              "evaluated", "wall_s")
 ADAPT_COLS = ("node_nm", "mesh", "fetch", "vlen", "wmem_kb", "dmem_kb",
               "freq_mhz", "tok_s", "power_mw", "area_mm2", "ppa_score")
+WORKER_COLS = ("worker", "cells", "episodes", "busy_s", "util_pct")
 
 
 def _fmt(v) -> str:
@@ -61,6 +65,25 @@ def adaptation_tables(store) -> Dict[str, List[Dict]]:
     return out
 
 
+def worker_rows(store) -> List[Dict]:
+    """Per-worker utilization of a fleet campaign ([] for single-process
+    runs): cells/episodes completed, busy seconds, and busy time as a
+    percentage of the fleet's wall clock (how evenly the deal kept the
+    workers fed)."""
+    fleet = store.manifest.get("fleet") or {}
+    stats = fleet.get("worker_stats") or {}
+    wall = float(fleet.get("wall_s") or 0.0)
+    rows = []
+    for name in sorted(stats):
+        s = stats[name]
+        busy = float(s.get("busy_s") or 0.0)
+        rows.append(dict(worker=name, cells=s.get("cells"),
+                         episodes=s.get("episodes"), busy_s=round(busy, 2),
+                         util_pct=(round(100.0 * busy / wall, 1)
+                                   if wall > 0 else None)))
+    return rows
+
+
 def write_reports(store, out_dir: Optional[str] = None) -> Dict[str, str]:
     """Emit cells + adaptation tables as JSON and markdown; returns paths."""
     out_dir = out_dir or os.path.join(store.root, "report")
@@ -88,4 +111,17 @@ def write_reports(store, out_dir: Optional[str] = None) -> Dict[str, str]:
         for key, rws in sorted(adapt.items()):
             f.write(f"\n## {key}\n\n")
             f.write(markdown_table(rws, ADAPT_COLS))
+
+    workers = worker_rows(store)
+    if workers:
+        paths["workers_json"] = os.path.join(out_dir, "workers.json")
+        with open(paths["workers_json"], "w") as f:
+            json.dump(workers, f, indent=1, allow_nan=False)
+        paths["workers_md"] = os.path.join(out_dir, "workers.md")
+        wall = (store.manifest.get("fleet") or {}).get("wall_s")
+        with open(paths["workers_md"], "w") as f:
+            f.write(f"# Campaign `{store.manifest['name']}` — per-worker "
+                    f"utilization ({len(workers)} workers, "
+                    f"fleet wall {_fmt(wall)}s)\n\n")
+            f.write(markdown_table(workers, WORKER_COLS))
     return paths

@@ -74,6 +74,55 @@ def run_batch(store: CampaignStore, batch: CellBatch,
         checkpoint_every=spec.checkpoint_every, resume=True)
 
 
+def _resumed_spec(store: CampaignStore, root: str,
+                  spec: Optional[CampaignSpec]) -> CampaignSpec:
+    if spec is not None and spec.to_dict() != store.manifest["spec"]:
+        raise ValueError(
+            f"--resume spec differs from the manifest in {root}; "
+            "resume without a grid file or start a new campaign")
+    return store.spec
+
+
+def execute_batch(store: CampaignStore, batch: CellBatch,
+                  spec: CampaignSpec,
+                  progress: Callable[[str], None] = lambda m: None) -> int:
+    """Run one batch to completion against ``store``: resume any
+    checkpoint, persist every cell, clear the batch checkpoint.  Shared
+    by the single-process campaign loop and fleet workers
+    (``repro.campaign.distrib.run_worker``).  Returns the number of cells
+    completed (0 if none were pending)."""
+    pending = store.pending_cells(batch)
+    if not pending:
+        # a kill between the batch's last complete_cell and clear_ckpt
+        # would otherwise leave its checkpoints on disk forever
+        store.clear_ckpt(batch.batch_id)
+        return 0
+    wl = extract(get_config(batch.arch), seq_len=spec.seq_len,
+                 batch=spec.batch)
+    progress(f"[campaign] {batch.batch_id}: {len(batch.node_nms)} cells "
+             f"x {spec.lanes} lanes, {spec.episodes} ep/cell")
+    done_before = {c.cell_id for c in batch.cells if c not in pending}
+    store.mark_running(batch)
+    results = run_batch(store, batch, wl, spec)
+    completed = 0
+    for cell, res in zip(batch.cells, results):
+        if cell.cell_id in done_before:
+            # a re-run of a partially-completed batch reproduces the done
+            # cell bit-for-bit; skipping the re-append avoids duplicate
+            # records and keeps the manifest's provenance (fleet worker
+            # tag) intact
+            continue
+        summary = cell_summary(cell, res)
+        store.complete_cell(cell, summary, res.archive.entries)
+        completed += 1
+        score = summary["ppa_score"]
+        progress(f"[campaign]   {cell.cell_id}: score="
+                 f"{'-' if score is None else format(score, '.4f')} "
+                 f"frontier={summary['frontier']}")
+    store.clear_ckpt(batch.batch_id)
+    return completed
+
+
 def run_campaign(root: str, spec: Optional[CampaignSpec] = None, *,
                  resume: bool = False,
                  progress: Callable[[str], None] = print) -> CampaignStore:
@@ -85,11 +134,13 @@ def run_campaign(root: str, spec: Optional[CampaignSpec] = None, *,
     """
     if resume:
         store = CampaignStore.open(root)
-        if spec is not None and spec.to_dict() != store.manifest["spec"]:
+        if store.manifest.get("fleet", {}).get("assignments"):
             raise ValueError(
-                f"--resume spec differs from the manifest in {root}; "
-                "resume without a grid file or start a new campaign")
-        spec = store.spec
+                f"{root} is a fleet campaign with undealt work; resume it "
+                "at fleet scope (repro.launch.dse --resume, or "
+                "repro.launch.fleet.launch_fleet(resume=True)) so worker "
+                "results are reconciled and checkpoints relocated")
+        spec = _resumed_spec(store, root, spec)
     else:
         if spec is None:
             raise ValueError("a CampaignSpec is required to start a campaign")
@@ -98,27 +149,7 @@ def run_campaign(root: str, spec: Optional[CampaignSpec] = None, *,
     t0 = time.time()
     n_done = 0
     for batch in batches:
-        pending = store.pending_cells(batch)
-        if not pending:
-            # a kill between the batch's last complete_cell and clear_ckpt
-            # would otherwise leave its checkpoints on disk forever
-            store.clear_ckpt(batch.batch_id)
-            continue
-        wl = extract(get_config(batch.arch), seq_len=spec.seq_len,
-                     batch=spec.batch)
-        progress(f"[campaign] {batch.batch_id}: {len(batch.node_nms)} cells "
-                 f"x {spec.lanes} lanes, {spec.episodes} ep/cell")
-        store.mark_running(batch)
-        results = run_batch(store, batch, wl, spec)
-        for cell, res in zip(batch.cells, results):
-            summary = cell_summary(cell, res)
-            store.complete_cell(cell, summary, res.archive.entries)
-            n_done += 1
-            score = summary["ppa_score"]
-            progress(f"[campaign]   {cell.cell_id}: score="
-                     f"{'-' if score is None else format(score, '.4f')} "
-                     f"frontier={summary['frontier']}")
-        store.clear_ckpt(batch.batch_id)
+        n_done += execute_batch(store, batch, spec, progress)
     write_reports(store)
     progress(f"[campaign] {store.manifest['name']}: "
              f"{n_done} cells run, all_done={store.all_done()}, "

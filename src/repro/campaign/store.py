@@ -27,6 +27,7 @@ import time
 from typing import Dict, List, Optional
 
 from repro.campaign.planner import CampaignSpec, Cell, CellBatch
+from repro.core.fsutil import fsync_dir
 from repro.core.pareto import ArchiveEntry, ParetoArchive
 
 STATUS_PENDING = "pending"
@@ -45,17 +46,50 @@ def _git_sha() -> str:
 
 
 def _atomic_write_json(path: str, payload: Dict) -> None:
+    """tmp-write -> fsync -> rename -> dir fsync.
+
+    The fsync BEFORE ``os.replace`` is load-bearing: without it a power
+    loss after the rename can leave ``path`` pointing at a tmp file whose
+    data blocks never hit disk — a truncated file shadowing a valid
+    manifest.  With it, the rename atomically publishes fully-durable
+    bytes, so a reader always sees either the old or the new manifest."""
     d = os.path.dirname(os.path.abspath(path))
     os.makedirs(d, exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=d, prefix=".tmp_manifest_")
     try:
         with os.fdopen(fd, "w") as f:
             json.dump(payload, f, indent=1, allow_nan=False)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
+        fsync_dir(d)
     except Exception:
         if os.path.exists(tmp):
             os.remove(tmp)
         raise
+
+
+def _read_jsonl(path: str) -> List[Dict]:
+    """Decode a JSONL file, skipping torn lines.
+
+    A SIGKILL / power loss mid-append can leave a partial line; the
+    record it belonged to is re-appended by the resumed writer (appends
+    start on a fresh line past a torn tail), so after healing a torn line
+    can sit mid-file.  Undecodable lines are therefore skipped wherever
+    they appear — the dominance filter and last-summary-wins semantics
+    make re-appended records safe."""
+    with open(path) as f:
+        lines = f.readlines()
+    out = []
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            out.append(json.loads(line))
+        except json.JSONDecodeError:
+            continue
+    return out
 
 
 class CampaignStore:
@@ -122,7 +156,7 @@ class CampaignStore:
         cell and appends a second frontier (deduplicated by the dominance
         filter at merge/load time) — completed cells are never lost."""
         self.append_points(cell.cell_id, entries)
-        self._append_line(cell.cell_id, dict(kind="summary", **summary))
+        self.append_summary(cell.cell_id, summary)
         self.manifest["cells"][cell.cell_id] = dict(
             status=STATUS_DONE, completed=time.strftime("%Y-%m-%dT%H:%M:%S"),
             **{k: summary[k] for k in ("ppa_score", "episodes", "wall_s",
@@ -139,25 +173,45 @@ class CampaignStore:
     def _cell_path(self, cell_id: str) -> str:
         return os.path.join(self.root, "cells", f"{cell_id}.jsonl")
 
+    def _torn_tail(self, path: str) -> bool:
+        """True if a previous writer died mid-line (no trailing newline);
+        the next append then starts on a fresh line so the torn tail stays
+        one skippable line instead of corrupting the new record too."""
+        try:
+            with open(path, "rb") as f:
+                f.seek(-1, os.SEEK_END)
+                return f.read(1) != b"\n"
+        except (OSError, ValueError):
+            return False
+
     def _append_line(self, cell_id: str, payload: Dict) -> None:
+        self.append_lines(cell_id, [payload])
+
+    def append_lines(self, cell_id: str, payloads: List[Dict]) -> None:
+        """Append records as JSONL lines (one fsync for the whole chunk)."""
+        if not payloads:
+            return
         os.makedirs(os.path.join(self.root, "cells"), exist_ok=True)
-        with open(self._cell_path(cell_id), "a") as f:
-            f.write(json.dumps(payload, allow_nan=False) + "\n")
+        path = self._cell_path(cell_id)
+        lead = "\n" if self._torn_tail(path) else ""
+        with open(path, "a") as f:
+            for p in payloads:
+                f.write(lead + json.dumps(p, allow_nan=False) + "\n")
+                lead = ""
             f.flush()
             os.fsync(f.fileno())
 
     def append_points(self, cell_id: str,
                       entries: List[ArchiveEntry]) -> None:
         """Append evaluated design points (one JSONL line per point)."""
-        if not entries:
-            return
-        os.makedirs(os.path.join(self.root, "cells"), exist_ok=True)
-        with open(self._cell_path(cell_id), "a") as f:
-            for e in entries:
-                f.write(json.dumps(dict(kind="point", **e.to_dict()),
-                                   allow_nan=False) + "\n")
-            f.flush()
-            os.fsync(f.fileno())
+        self.append_lines(cell_id, [dict(kind="point", **e.to_dict())
+                                    for e in entries])
+
+    def append_summary(self, cell_id: str, summary: Dict) -> None:
+        """Append a best-PPA summary record (reconciler + complete_cell)."""
+        self._append_line(cell_id, dict(
+            kind="summary", **{k: v for k, v in summary.items()
+                               if k != "kind"}))
 
     def load_archive(self, cell_id: str) -> ParetoArchive:
         """Rebuild the cell's Pareto archive from its JSONL (dominance-
@@ -165,10 +219,9 @@ class CampaignStore:
         ar = ParetoArchive()
         path = self._cell_path(cell_id)
         if os.path.isfile(path):
-            with open(path) as f:
-                ar.insert_batch(_dedupe([
-                    ArchiveEntry.from_dict(rec) for rec in map(json.loads, f)
-                    if rec.get("kind") == "point"]))
+            ar.insert_batch(_dedupe([
+                ArchiveEntry.from_dict(rec) for rec in _read_jsonl(path)
+                if rec.get("kind") == "point"]))
         return ar
 
     def load_summary(self, cell_id: str) -> Optional[Dict]:
@@ -176,10 +229,9 @@ class CampaignStore:
         path = self._cell_path(cell_id)
         out = None
         if os.path.isfile(path):
-            with open(path) as f:
-                for rec in map(json.loads, f):
-                    if rec.get("kind") == "summary":
-                        out = rec
+            for rec in _read_jsonl(path):
+                if rec.get("kind") == "summary":
+                    out = rec
         return out
 
     def summaries(self) -> Dict[str, Dict]:

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.fsutil import fsync_dir, fsync_file
+
 
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:
     flat = {}
@@ -78,10 +80,17 @@ def save(tree: Any, ckpt_dir: str, step: int, *, keep: int = 3,
         np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        # durable BEFORE the rename publishes the step dir: a power loss
+        # must never leave a visible step_N with truncated contents
+        fsync_file(os.path.join(tmp, "arrays.npz"))
+        fsync_dir(tmp)
         final = os.path.join(ckpt_dir, f"step_{int(step):08d}")
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
+        fsync_dir(ckpt_dir)
     except Exception:
         shutil.rmtree(tmp, ignore_errors=True)
         raise

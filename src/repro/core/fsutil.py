@@ -1,0 +1,32 @@
+"""Durable-write helpers shared by the campaign store and checkpoint
+manager.  Crash-safety-critical: the atomic tmp-write -> fsync -> rename
+-> dir-fsync sequence both modules rely on is only power-loss safe if
+the data hits disk BEFORE the rename publishes it."""
+from __future__ import annotations
+
+import os
+
+
+def fsync_file(path: str) -> None:
+    """fsync an already-written file by path (O_RDONLY fds are fine for
+    fsync on the platforms we support)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def fsync_dir(path: str) -> None:
+    """Persist a rename: fsync the containing directory (no-op where the
+    filesystem does not support directory fds)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)

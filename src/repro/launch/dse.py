@@ -139,6 +139,11 @@ def validate_args(ap: argparse.ArgumentParser,
         ap.error(f"{'/'.join(gate_flags)} applies to --engine vec or "
                  "--campaign runs; the scalar engine has no surrogate "
                  "screening gate")
+    if a.workers is not None and a.workers < 1:
+        ap.error(f"--workers must be >= 1 (got {a.workers})")
+    if a.workers is not None and not (a.campaign or a.resume):
+        ap.error("--workers shards a campaign across worker processes; "
+                 "pass --campaign (or --resume) with it")
     if a.campaign and a.resume:
         ap.error("--campaign starts a new run and --resume continues an "
                  "existing one; pass exactly one")
@@ -185,9 +190,17 @@ def main(argv: Optional[List[str]] = None) -> None:
                     help="grid spec (.yaml/.json): run a full multi-workload"
                          " x multi-node campaign instead of a single search")
     ap.add_argument("--resume", default="",
-                    help="existing campaign run directory to resume")
+                    help="existing campaign run directory to resume "
+                         "(fleet campaigns resume at fleet scope: "
+                         "completed cells are reconciled and skipped, "
+                         "unfinished batches are re-dealt)")
     ap.add_argument("--campaign-root", default="experiments/campaigns",
                     help="parent directory for new campaign run dirs")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="shard the campaign's cell batches across this "
+                         "many shared-nothing worker processes "
+                         "(repro.launch.fleet); with --resume, overrides "
+                         "the manifest's recorded worker count")
     ap.add_argument("--verbose", action="store_true")
     a = ap.parse_args(argv)
     validate_args(ap, a)
@@ -195,7 +208,13 @@ def main(argv: Optional[List[str]] = None) -> None:
         import dataclasses
         from repro.campaign import CampaignSpec, run_campaign
         if a.resume:
-            run_campaign(a.resume, resume=True)
+            with open(os.path.join(a.resume, "manifest.json")) as f:
+                manifest = json.load(f)
+            if a.workers is not None or manifest.get("fleet"):
+                from repro.launch.fleet import run_fleet
+                run_fleet(a.resume, workers=a.workers, resume=True)
+            else:
+                run_campaign(a.resume, resume=True)
         else:
             try:
                 spec = CampaignSpec.from_file(a.campaign)
@@ -210,7 +229,14 @@ def main(argv: Optional[List[str]] = None) -> None:
                 overrides["surrogate_gate"] = False
             if overrides:
                 spec = dataclasses.replace(spec, **overrides)
-            run_campaign(os.path.join(a.campaign_root, spec.name), spec)
+            root = os.path.join(a.campaign_root, spec.name)
+            if a.workers is not None:
+                # any explicit --workers (including 1) runs the fleet
+                # layout, matching what --resume --workers produces
+                from repro.launch.fleet import run_fleet
+                run_fleet(root, spec, workers=a.workers)
+            else:
+                run_campaign(root, spec)
         return
     nodes = list(NODES) if a.nodes == "all" else [
         int(x) for x in a.nodes.split(",")]

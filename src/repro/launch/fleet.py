@@ -1,0 +1,176 @@
+"""Fleet launcher: shared-nothing multi-process campaign workers.
+
+``repro.launch.dse --campaign grid.yaml --workers W`` routes here.  The
+planner's cell batches are dealt deterministically to W workers
+(``repro.campaign.distrib.shard_batches``); each worker is spawned as
+
+    python -m repro.launch.fleet --root <run-dir> --worker <i>
+
+and runs its own ``run_search_cells`` loop with its own checkpoints under
+``<run-dir>/worker-<i>/``.  The parent waits, then reconciles the worker
+manifests and archives into the top-level manifest and writes the report
+(incl. the per-worker utilization table).  ``--resume`` works at fleet
+scope: completed cells are never re-run, dead workers' unfinished batches
+are re-dealt to the new worker set, and in-flight checkpoints are
+relocated so a resumed batch restores bit-for-bit.
+
+Workers share a persistent XLA compile cache (env
+``REPRO_FLEET_COMPILE_CACHE``, default ``<run-dir>/.jax_cache``) so W
+processes pay for one compile of the shared search step, not W.
+
+Workers only ever touch the shared run directory, so the same layout
+shards across hosts: run ``python -m repro.launch.fleet --root <shared-
+dir> --worker <i>`` on each host against a shared filesystem and
+reconcile with ``--resume`` (or ``repro.campaign.distrib.reconcile``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import signal
+import subprocess
+import sys
+from typing import Dict, List, Optional
+
+COMPILE_CACHE_ENV = "REPRO_FLEET_COMPILE_CACHE"
+
+
+class FleetError(RuntimeError):
+    """One or more workers exited non-zero (results so far are reconciled;
+    rerun with --resume to re-deal the unfinished batches)."""
+
+
+def enable_compile_cache(path: str) -> None:
+    """Point jax's persistent compile cache at ``path`` (best-effort: an
+    older jax without the knobs just compiles per-process)."""
+    import jax
+    for key, val in (("jax_compilation_cache_dir", path),
+                     ("jax_persistent_cache_min_compile_time_secs", 0.0),
+                     ("jax_persistent_cache_min_entry_size_bytes", -1)):
+        try:
+            jax.config.update(key, val)
+        except Exception:
+            pass
+
+
+def _worker_env(root: str) -> Dict[str, str]:
+    """Child env: repro importable + shared compile cache under the run
+    dir unless the caller already pinned one."""
+    import repro
+    env = dict(os.environ)
+    # __path__ (not __file__): repro is a namespace package without its
+    # own __init__.py, so __file__ is None
+    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    parts = [src] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep)
+                     if p and p != src]
+    env["PYTHONPATH"] = os.pathsep.join(parts)
+    env.setdefault(COMPILE_CACHE_ENV,
+                   os.path.join(os.path.abspath(root), ".jax_cache"))
+    return env
+
+
+@dataclasses.dataclass
+class FleetHandle:
+    """A launched fleet: the worker processes plus finalization.
+
+    ``wait()`` blocks until every worker exits, reconciles the worker run
+    directories into the top-level manifest, writes reports, and returns
+    the top-level store — raising :class:`FleetError` afterwards if any
+    worker failed (the reconcile still happened, so a follow-up
+    ``--resume`` only re-deals what is genuinely unfinished)."""
+    root: str
+    procs: Dict[int, subprocess.Popen]
+    progress: object = print
+
+    def kill(self, idx: int, sig: int = signal.SIGKILL) -> None:
+        self.procs[idx].send_signal(sig)
+
+    def wait(self, raise_on_failure: bool = True):
+        for p in self.procs.values():
+            p.wait()
+        store = finalize_fleet(self.root, progress=self.progress)
+        failed = {i: p.returncode for i, p in self.procs.items()
+                  if p.returncode != 0}
+        if failed and raise_on_failure:
+            raise FleetError(
+                f"worker(s) {sorted(failed)} exited non-zero "
+                f"({failed}); completed cells are reconciled — rerun with "
+                f"--resume {self.root} to re-deal the unfinished batches")
+        return store
+
+
+def finalize_fleet(root: str, progress=print):
+    """Reconcile worker results into the top-level store + write reports."""
+    from repro.campaign.distrib import reconcile
+    from repro.campaign.report import write_reports
+    from repro.campaign.store import CampaignStore
+    store = CampaignStore.open(root)
+    reconcile(store, progress=progress, freeze_clock=True)
+    write_reports(store)
+    done = sum(r["status"] == "done"
+               for r in store.manifest["cells"].values())
+    progress(f"[fleet] {store.manifest['name']}: {done}/"
+             f"{len(store.manifest['cells'])} cells done, "
+             f"all_done={store.all_done()} -> {root}")
+    return store
+
+
+def launch_fleet(root: str, spec=None, *, workers: Optional[int] = None,
+                 resume: bool = False, progress=print) -> FleetHandle:
+    """Deal the campaign's batches to ``workers`` local worker processes.
+
+    Fresh launch needs ``spec``; ``resume=True`` reopens ``root``
+    (reconciling first, re-dealing pending batches, relocating
+    checkpoints).  Returns a :class:`FleetHandle`; call ``.wait()``."""
+    from repro.campaign import distrib
+    if resume:
+        store = distrib.plan_resume(root, workers)
+    else:
+        if spec is None:
+            raise ValueError("a CampaignSpec is required to start a fleet")
+        store = distrib.create_fleet(root, spec, int(workers or 1))
+    assignments = store.manifest["fleet"]["assignments"]
+    env = _worker_env(root)
+    procs: Dict[int, subprocess.Popen] = {}
+    for idx in sorted(set(assignments.values())):
+        wroot = distrib.worker_root(root, idx)
+        os.makedirs(wroot, exist_ok=True)
+        with open(os.path.join(wroot, "worker.log"), "ab") as log:
+            procs[idx] = subprocess.Popen(
+                [sys.executable, "-m", "repro.launch.fleet",
+                 "--root", root, "--worker", str(idx)],
+                env=env, stdout=log, stderr=subprocess.STDOUT)
+    n_batches = len(assignments)
+    progress(f"[fleet] {store.manifest['name']}: {len(procs)} workers x "
+             f"{n_batches} batches"
+             + (" (resume)" if resume else "")
+             + (": nothing pending" if not n_batches else ""))
+    return FleetHandle(root=root, procs=procs, progress=progress)
+
+
+def run_fleet(root: str, spec=None, *, workers: Optional[int] = None,
+              resume: bool = False, progress=print):
+    """launch_fleet + wait: the blocking one-call fleet run."""
+    return launch_fleet(root, spec, workers=workers, resume=resume,
+                        progress=progress).wait()
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    """Worker entry point (the parent CLI is ``repro.launch.dse``)."""
+    ap = argparse.ArgumentParser(
+        description="fleet worker process (spawned by launch_fleet)")
+    ap.add_argument("--root", required=True,
+                    help="campaign run directory (shared with the parent)")
+    ap.add_argument("--worker", type=int, required=True,
+                    help="this worker's slot index in the manifest deal")
+    a = ap.parse_args(argv)
+    cache = os.environ.get(COMPILE_CACHE_ENV)
+    if cache:
+        enable_compile_cache(cache)
+    from repro.campaign.distrib import run_worker
+    run_worker(a.root, a.worker)
+
+
+if __name__ == "__main__":
+    main()

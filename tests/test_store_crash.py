@@ -1,0 +1,140 @@
+"""Crash-safety regressions for the campaign store + checkpoint manager:
+manifest writes fsync before rename (so the atomicity holds on power
+loss, not just on process kill), a truncated tmp file never shadows a
+valid manifest, and torn JSONL tails are tolerated and healed."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import repro.campaign.store as store_mod
+import repro.checkpoint.manager as ckpt_mod
+from repro.campaign import CampaignSpec, CampaignStore
+from repro.campaign.planner import Cell
+from repro.core.pareto import ArchiveEntry
+
+ARCH = "smollm-135m"
+
+
+def tiny_spec(name):
+    return CampaignSpec(name=name, workloads=[ARCH], nodes=[3],
+                        modes=["high_perf"], episodes=8, lanes=4,
+                        max_envs=4, seed=0, seq_len=256, batch=1)
+
+
+def mk_entry(power, perf, i=0):
+    return ArchiveEntry(cfg=np.full(30, float(i), np.float32),
+                        power_mw=float(power), perf_gops=float(perf),
+                        area_mm2=1.0, tok_s=1.0, ppa_score=0.5, episode=i)
+
+
+# ------------------------------------------------- fsync-before-rename
+def test_manifest_fsync_before_rename(tmp_path, monkeypatch):
+    """Regression: manifest writes must fsync the tmp file BEFORE the
+    rename publishes it (plain os.replace leaves a window where power
+    loss exposes a truncated file under the final name)."""
+    calls = []
+    real_fsync, real_replace = os.fsync, os.replace
+    monkeypatch.setattr(store_mod.os, "fsync",
+                        lambda fd: (calls.append("fsync"),
+                                    real_fsync(fd))[1])
+    monkeypatch.setattr(store_mod.os, "replace",
+                        lambda a, b: (calls.append("replace"),
+                                      real_replace(a, b))[1])
+    CampaignStore.create(str(tmp_path / "c"), tiny_spec("c"))
+    assert "replace" in calls
+    assert "fsync" in calls[:calls.index("replace")], \
+        f"manifest rename not preceded by fsync: {calls}"
+
+
+def test_checkpoint_fsync_before_rename(tmp_path, monkeypatch):
+    calls = []
+    real_fsync, real_rename = os.fsync, os.rename
+    monkeypatch.setattr(ckpt_mod.os, "fsync",
+                        lambda fd: (calls.append("fsync"),
+                                    real_fsync(fd))[1])
+    monkeypatch.setattr(ckpt_mod.os, "rename",
+                        lambda a, b: (calls.append("rename"),
+                                      real_rename(a, b))[1])
+    ckpt_mod.save({"w": np.arange(4.0)}, str(tmp_path / "ck"), step=1)
+    assert "rename" in calls
+    assert "fsync" in calls[:calls.index("rename")], \
+        f"checkpoint rename not preceded by fsync: {calls}"
+    flat, _ = ckpt_mod.restore_flat(str(tmp_path / "ck"))
+    assert np.array_equal(flat["w"], np.arange(4.0))
+
+
+# ---------------------------------------- truncated tmp never shadows
+def test_failed_manifest_write_preserves_old_manifest(tmp_path,
+                                                      monkeypatch):
+    root = str(tmp_path / "m")
+    store = CampaignStore.create(root, tiny_spec("m"))
+    old = open(os.path.join(root, "manifest.json")).read()
+
+    class TornJson:
+        """json facade whose dump dies mid-write (truncated tmp file)."""
+        def __getattr__(self, name):
+            return getattr(json, name)
+
+        @staticmethod
+        def dump(payload, f, **kw):
+            f.write('{"name": "m", "cells": {"tru')
+            raise OSError("simulated mid-write crash")
+
+    monkeypatch.setattr(store_mod, "json", TornJson())
+    store.manifest["cells"]["x"] = dict(status="pending")
+    with pytest.raises(OSError, match="mid-write"):
+        store.save_manifest()
+    monkeypatch.setattr(store_mod, "json", json)
+    # the published manifest is untouched and no tmp residue remains
+    assert open(os.path.join(root, "manifest.json")).read() == old
+    assert not [f for f in os.listdir(root) if f.startswith(".tmp_")]
+    assert "x" not in CampaignStore.open(root).manifest["cells"]
+
+
+def test_stale_tmp_file_is_ignored(tmp_path):
+    """A fully-written-but-never-renamed tmp (power loss between write
+    and rename) must not shadow the valid manifest."""
+    root = str(tmp_path / "s")
+    store = CampaignStore.create(root, tiny_spec("s"))
+    with open(os.path.join(root, ".tmp_manifest_stale"), "w") as f:
+        f.write('{"name": "evil twin", "cells"')      # truncated garbage
+    re = CampaignStore.open(root)
+    assert re.manifest["name"] == "s"
+    assert re.manifest["cells"] == store.manifest["cells"]
+
+
+# ------------------------------------------------------ torn JSONL tails
+def test_torn_jsonl_tail_tolerated_and_healed(tmp_path):
+    """A SIGKILL mid-append can tear the last JSONL line: loads must skip
+    the torn tail, and the next append must start on a fresh line so the
+    torn bytes never corrupt a later record."""
+    root = str(tmp_path / "t")
+    store = CampaignStore.create(root, tiny_spec("t"))
+    cell = Cell(ARCH, 3, "high_perf")
+    store.append_points(cell.cell_id, [mk_entry(10, 50, 0)])
+    store.append_summary(cell.cell_id, dict(cell_id=cell.cell_id,
+                                            ppa_score=0.5))
+    path = store._cell_path(cell.cell_id)
+    with open(path, "a") as f:                        # torn, no newline
+        f.write('{"kind": "point", "cfg": [0.1, 0.')
+
+    assert len(store.load_archive(cell.cell_id)) == 1
+    assert store.load_summary(cell.cell_id)["ppa_score"] == 0.5
+
+    # healing: the next append starts a fresh line past the torn tail
+    store.append_points(cell.cell_id, [mk_entry(5, 60, 1)])
+    objs = sorted((e.power_mw, e.perf_gops)
+                  for e in store.load_archive(cell.cell_id).entries)
+    assert objs == [(5.0, 60.0)]                      # dominates (10, 50)
+    with open(path) as f:
+        lines = f.read().splitlines()
+    assert lines[2].startswith('{"kind": "point", "cfg": [0.1, 0.')
+    assert json.loads(lines[3])["power_mw"] == 5.0
+
+    # a healed torn line mid-file keeps being skipped on every later load
+    assert store.load_summary(cell.cell_id)["ppa_score"] == 0.5
+    store.append_summary(cell.cell_id, dict(cell_id=cell.cell_id,
+                                            ppa_score=0.9))
+    assert store.load_summary(cell.cell_id)["ppa_score"] == 0.9

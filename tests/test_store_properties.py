@@ -1,0 +1,144 @@
+"""Property tests: ``store.merge_runs`` is an idempotent, commutative,
+associative dominance-filtered union, and a merged archive never keeps a
+dominated point.
+
+The hypothesis suite skips cleanly when hypothesis is not installed; a
+seeded numpy sweep below exercises the same invariants everywhere.
+"""
+import itertools
+import os
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.campaign.store import CampaignStore, merge_runs, _entry_key
+from repro.core.pareto import ArchiveEntry, _dominates
+
+CID = "smollm-135m__3nm__high_perf"
+
+
+def mk_entry(power, perf, area, tag=0.0):
+    return ArchiveEntry(cfg=np.full(30, float(tag), np.float32),
+                        power_mw=float(power), perf_gops=float(perf),
+                        area_mm2=float(area), tok_s=1.0, ppa_score=0.5,
+                        episode=0)
+
+
+def _mk_store(root, entries):
+    """A minimal one-cell store (no grid expansion, no git lookup)."""
+    os.makedirs(os.path.join(root, "cells"), exist_ok=True)
+    s = CampaignStore(root, dict(name=os.path.basename(root),
+                                 cells={CID: dict(status="pending")}))
+    s.save_manifest()
+    s.append_points(CID, entries)
+    return s
+
+
+def _merged_keys(dst_entries, src_entry_lists):
+    """Frontier key-set after merging src stores into a fresh dst — read
+    both from the returned archives and from a reload of dst's JSONL."""
+    tmp = tempfile.mkdtemp(prefix="merge_prop_")
+    try:
+        dst = _mk_store(os.path.join(tmp, "dst"), dst_entries)
+        roots = []
+        for i, entries in enumerate(src_entry_lists):
+            _mk_store(os.path.join(tmp, f"src{i}"), entries)
+            roots.append(os.path.join(tmp, f"src{i}"))
+        merged = merge_runs(dst, roots)
+        keys = frozenset(_entry_key(e) for e in merged[CID].entries)
+        reload_keys = frozenset(_entry_key(e)
+                                for e in dst.load_archive(CID).entries)
+        assert keys == reload_keys, \
+            "dst JSONL reload diverges from the returned merge"
+        # never a dominated point in the merged archive
+        for a, b in itertools.permutations(merged[CID].entries, 2):
+            assert not _dominates(a.objectives(), b.objectives()), \
+                f"dominated point survived the merge: {b.objectives()}"
+        return keys
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def check_merge_invariants(sets):
+    """sets: >= 2 lists of entries.  Checks idempotence, commutativity and
+    associativity of the dominance-filtered union on the frontier sets."""
+    a, rest = sets[0], sets[1:]
+    ref = _merged_keys(a, rest)
+    # idempotent: merging the same sources again changes nothing (and the
+    # JSONL does not grow — checked separately below)
+    assert _merged_keys(a, rest + rest) == ref
+    # commutative: source order is irrelevant
+    assert _merged_keys(a, list(reversed(rest))) == ref
+    # associative/rotation: any grouping of the same pool merges equal —
+    # fold pairwise in a rotated order
+    rot = rest + [a]
+    acc = rot[0]
+    tmp = tempfile.mkdtemp(prefix="merge_assoc_")
+    try:
+        acc_store = _mk_store(os.path.join(tmp, "acc"), acc)
+        for i, s in enumerate(rot[1:]):
+            _mk_store(os.path.join(tmp, f"s{i}"), s)
+            merged = merge_runs(acc_store, [os.path.join(tmp, f"s{i}")])
+        assert frozenset(_entry_key(e) for e in merged[CID].entries) == ref
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def _rand_sets(rng):
+    n_sets = int(rng.integers(2, 4))
+    return [[mk_entry(int(rng.integers(1, 5)), int(rng.integers(1, 5)),
+                      int(rng.integers(1, 4)), tag=float(rng.integers(0, 2)))
+             for _ in range(int(rng.integers(0, 8)))]
+            for _ in range(n_sets)]
+
+
+def test_merge_invariants_seeded_sweep():
+    """Hypothesis-free sweep of the same invariants (always runs)."""
+    rng = np.random.default_rng(0)
+    for _ in range(12):
+        check_merge_invariants(_rand_sets(rng))
+
+
+def test_merge_idempotence_does_not_grow_jsonl(tmp_path):
+    a = [mk_entry(1, 4, 1), mk_entry(2, 2, 2)]
+    b = [mk_entry(1, 4, 1), mk_entry(4, 1, 1), mk_entry(5, 5, 5)]
+    dst = _mk_store(str(tmp_path / "dst"), a)
+    _mk_store(str(tmp_path / "src"), b)
+    merge_runs(dst, [str(tmp_path / "src")])
+    size = os.path.getsize(dst._cell_path(CID))
+    merge_runs(dst, [str(tmp_path / "src")])
+    assert os.path.getsize(dst._cell_path(CID)) == size
+
+
+# ----------------------------------------------------- hypothesis suite
+hyp = pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+entry_st = st.builds(mk_entry,
+                     power=st.integers(1, 4), perf=st.integers(1, 4),
+                     area=st.integers(1, 3),
+                     tag=st.sampled_from([0.0, 1.0]))
+sets_st = st.lists(st.lists(entry_st, max_size=7), min_size=2, max_size=3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(sets_st)
+def test_merge_union_invariants(sets):
+    check_merge_invariants(sets)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(entry_st, max_size=10), st.lists(entry_st, max_size=10))
+def test_merge_equals_pooled_pareto_filter(a, b):
+    """The merged frontier equals the Pareto filter of the pooled points
+    (no merge-order artifact can add or drop a point)."""
+    from repro.core.pareto import ParetoArchive
+    from repro.campaign.store import _dedupe
+    keys = _merged_keys(a, [b])
+    pool = ParetoArchive()
+    pool.insert_batch(_dedupe(a + b))
+    assert keys == frozenset(_entry_key(e) for e in pool.entries)
