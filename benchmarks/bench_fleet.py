@@ -9,7 +9,10 @@ stays balanced at any worker count.
 
 A warmup fleet populates the shared persistent compile cache first
 (``repro.launch.fleet`` points every worker at it), so both timed runs
-measure steady-state search throughput rather than XLA compiles.
+measure steady-state search throughput rather than XLA compiles.  Both
+legs run with the elastic supervisor and worker lease heartbeats
+enabled (the production path), so the floor keeps those overheads
+honest.
 
 Floor (enforced by ``benchmarks.check_floors``): speedup >= 2.5x at
 W=4 on a machine with >= 8 cores, scaled by the achievable parallelism
@@ -115,8 +118,10 @@ def bench_rows():
     out_dir = os.environ.get("REPRO_BENCH_OUT", "experiments/tables")
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "bench_fleet.json"), "w") as f:
+        from repro.campaign.store import DEFAULT_LEASE_TTL_S
         json.dump({"n_cells": n_cells, "episodes_per_cell": EPISODES,
                    "lanes": LANES, "arch": ARCH, "workers": WORKERS,
+                   "supervised": True, "lease_ttl_s": DEFAULT_LEASE_TTL_S,
                    "cores": cores, "w1_s": w1_s, "wN_s": wN_s,
                    "w1_busy_s": busy(s1), "wN_busy_s": busy(sN),
                    "cells_per_hour_w1": cph_1,

@@ -30,23 +30,30 @@ manifest write — JSONL first, manifest second, so a reconcile interrupted
 mid-write leaves the previous manifest valid and a re-run is idempotent.
 
 Everything here is process-agnostic and host-shardable: a worker needs
-only the shared run directory (``run_worker(root, i)``).  The launcher
-that actually spawns local worker processes lives in
-``repro.launch.fleet``.
+only the shared run directory (``run_worker(root, i)``), and it
+advertises liveness there too — ``worker-<i>/lease.json`` refreshed by a
+:class:`Heartbeat` thread — so a supervisor anywhere on the shared
+filesystem can evict silent workers and ``redeal_batches`` to fresh
+slots mid-run.  The launchers that actually spawn worker processes
+(local subprocess or command-template/ssh) and the supervisor loop live
+in ``repro.launch.fleet``.
 """
 from __future__ import annotations
 
 import glob
 import os
 import shutil
+import threading
 import time
 from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.campaign.planner import CampaignSpec, CellBatch, plan
-from repro.campaign.store import (STATUS_DONE, CampaignStore, _git_sha,
-                                  merge_runs)
+from repro.campaign.planner import (CampaignSpec, CellBatch, plan,
+                                    plan_cached)
+from repro.campaign.store import (DEFAULT_LEASE_TTL_S, STATUS_DONE,
+                                  CampaignStore, _git_sha, lease_expired,
+                                  merge_runs, read_lease, write_lease)
 
 # manifest["cells"][cid] / summary keys that legitimately differ between
 # two bit-identical runs (wall clock, scheduling) — excluded from
@@ -83,24 +90,53 @@ def worker_roots(root: str) -> List[str]:
 
 def pending_batches(store: CampaignStore) -> List[CellBatch]:
     """Batches with at least one cell not yet ``done`` in the manifest."""
-    return [b for b in plan(store.spec)
+    return [b for b in plan_cached(store.spec)
             if any(store.status(c) != STATUS_DONE for c in b.cells)]
 
 
+def record_event(store: CampaignStore, kind: str, **fields) -> Dict:
+    """Append a supervision event (evict / redeal / give-up / stale-leg)
+    to the manifest's fleet block.  The caller owns the manifest write —
+    events ride along with whatever state change triggered them."""
+    ev = dict(ts=round(time.time(), 3), kind=kind, **fields)
+    store.manifest.setdefault("fleet", {}).setdefault(
+        "events", []).append(ev)
+    return ev
+
+
 # ------------------------------------------------------------- fleet plan
-def create_fleet(root: str, spec: CampaignSpec, workers: int
-                 ) -> CampaignStore:
-    """Create the top-level store + record the deterministic deal."""
+def create_fleet(root: str, spec: CampaignSpec, workers: int, *,
+                 lease_ttl_s: float = DEFAULT_LEASE_TTL_S) -> CampaignStore:
+    """Create the top-level store + record the deterministic deal.
+
+    ``lease_ttl_s`` is recorded in the fleet block so workers (which see
+    only the shared run directory) know their heartbeat cadence and the
+    supervisor knows when a silent worker is dead."""
     store = CampaignStore.create(root, spec)
-    assign = shard_batches(plan(spec), workers)
+    assign = shard_batches(plan_cached(spec), workers)
     store.manifest["fleet"] = dict(
         workers=workers, started_ts=time.time(),
+        lease_ttl_s=float(lease_ttl_s), events=[],
         assignments={b.batch_id: w for w, bs in assign.items() for b in bs})
     store.save_manifest()
     return store
 
 
-def plan_resume(root: str, workers: Optional[int] = None) -> CampaignStore:
+def redeal_batches(store: CampaignStore, batch_ids: List[str],
+                   new_idx: int) -> None:
+    """Move still-pending batches to worker slot ``new_idx`` mid-run:
+    update the recorded deal and relocate the batches' newest in-flight
+    checkpoints into the new owner's run directory (the same machinery a
+    fleet ``--resume`` uses, so the re-dealt batch restores bit-for-bit).
+    The caller saves the manifest — typically together with the event
+    that triggered the re-deal."""
+    moves = {bid: new_idx for bid in batch_ids}
+    _relocate_ckpts(store.root, moves)
+    store.manifest["fleet"]["assignments"].update(moves)
+
+
+def plan_resume(root: str, workers: Optional[int] = None, *,
+                lease_ttl_s: Optional[float] = None) -> CampaignStore:
     """Fleet-scope resume: reconcile what every prior worker finished,
     re-deal the still-pending batches to ``workers`` fresh worker slots,
     and relocate any orphan in-flight checkpoints to the slot that now
@@ -122,6 +158,9 @@ def plan_resume(root: str, workers: Optional[int] = None) -> CampaignStore:
     _relocate_ckpts(root, assignments)
     _clear_stale_ckpts(root, set(assignments))
     fleet.update(workers=workers, assignments=assignments)
+    if lease_ttl_s is not None:
+        fleet["lease_ttl_s"] = float(lease_ttl_s)
+    fleet.setdefault("lease_ttl_s", DEFAULT_LEASE_TTL_S)
     if todo:
         # close out the previous leg's wall clock (reconcile above wrote
         # wall_s for it) and start a new one; busy_s accumulates across
@@ -176,6 +215,55 @@ def _relocate_ckpts(root: str, assignments: Dict[str, int]) -> None:
 
 
 # ------------------------------------------------------------ worker side
+class Heartbeat:
+    """Background lease refresher for one worker process.
+
+    Refreshes ``worker-<i>/lease.json`` every ``ttl/4`` (floored at
+    200 ms) with (pid, host, ts, current batch) via the fsync'd atomic
+    writer, so liveness is observable from the shared run directory
+    alone.  ``beat(batch_id)`` both updates the advertised batch and
+    refreshes immediately; ``stop()`` writes a final ``done`` lease so a
+    clean exit is distinguishable from silent death."""
+
+    def __init__(self, worker_dir: str, idx: int,
+                 ttl_s: float = DEFAULT_LEASE_TTL_S):
+        self.worker_dir, self.idx = worker_dir, idx
+        self.ttl_s = float(ttl_s)
+        self.batch: Optional[str] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def _write(self, done: bool = False) -> None:
+        try:
+            write_lease(self.worker_dir, worker=self.idx,
+                        batch=self.batch, ttl_s=self.ttl_s, done=done)
+        except OSError:
+            # a transient shared-FS hiccup must not kill the search; the
+            # next refresh retries and the TTL absorbs one missed beat
+            pass
+
+    def _run(self) -> None:
+        while not self._stop.wait(max(0.2, self.ttl_s / 4.0)):
+            self._write()
+
+    def start(self) -> "Heartbeat":
+        self._write()
+        self._thread = threading.Thread(
+            target=self._run, name=f"lease-w{self.idx}", daemon=True)
+        self._thread.start()
+        return self
+
+    def beat(self, batch: Optional[str]) -> None:
+        self.batch = batch
+        self._write()
+
+    def stop(self, done: bool = True) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+        self._write(done=done)
+
+
 def _open_worker_store(root: str, idx: int, top: CampaignStore,
                        batches: List[CellBatch]) -> CampaignStore:
     """Open (or create) worker ``idx``'s store, seeded with its dealt
@@ -223,22 +311,53 @@ def run_worker(root: str, idx: int, progress=print) -> CampaignStore:
     if not fleet:
         raise ValueError(f"{root} is not a fleet campaign "
                          "(no fleet block in manifest.json)")
-    mine = [b for b in plan(top.spec)
+    mine = [b for b in plan_cached(top.spec)
             if fleet["assignments"].get(b.batch_id) == idx]
     store = _open_worker_store(root, idx, top, mine)
-    for batch in mine:
-        t0 = time.time()
-        n = execute_batch(store, batch, top.spec,
-                          progress=lambda m: progress(f"[w{idx}]{m}"))
-        if n:
-            store.manifest["worker"]["busy_s"] += time.time() - t0
-            store.save_manifest()
+    hb = Heartbeat(store.root, idx,
+                   ttl_s=float(fleet.get("lease_ttl_s")
+                               or DEFAULT_LEASE_TTL_S)).start()
+    try:
+        for batch in mine:
+            hb.beat(batch.batch_id)
+            t0 = time.time()
+            n = execute_batch(store, batch, top.spec,
+                              progress=lambda m: progress(f"[w{idx}]{m}"))
+            if n:
+                store.manifest["worker"]["busy_s"] += time.time() - t0
+                store.save_manifest()
+    except BaseException:
+        # crash path: the final lease must NOT read ``done`` — an exit
+        # with work outstanding is what the supervisor evicts on
+        hb.stop(done=False)
+        raise
+    hb.stop(done=True)
     progress(f"[w{idx}] done: {len(mine)} batches, "
              f"busy {store.manifest['worker']['busy_s']:.1f}s")
     return store
 
 
 # -------------------------------------------------------------- reconcile
+def _leg_end(roots: List[str], started: float, fleet: Dict
+             ) -> "tuple[float, bool]":
+    """(end-of-leg timestamp, leg-is-stale) for the wall clock.
+
+    A live leg (some worker heartbeated within the TTL, or no worker ever
+    wrote a lease — the pre-lease layout) ends "now".  A STALE leg — every
+    lease is older than the TTL, i.e. a SIGKILLed parent left
+    ``started_ts`` dangling and the workers are long dead — is closed at
+    the newest lease/heartbeat timestamp instead, so idle calendar time
+    between the crash and this reconcile never inflates ``wall_s`` and
+    dilutes ``util_pct``."""
+    now = time.time()
+    ttl = float(fleet.get("lease_ttl_s") or DEFAULT_LEASE_TTL_S)
+    beats = [float(lease["ts"]) for r in roots
+             if (lease := read_lease(r)) and lease.get("ts")]
+    if not beats or now - max(beats) <= ttl:
+        return now, False
+    return max(max(beats), started), True
+
+
 def reconcile(store: CampaignStore, progress=lambda m: None, *,
               freeze_clock: bool = False) -> List[str]:
     """Merge every worker run directory into the top-level store.
@@ -295,11 +414,15 @@ def reconcile(store: CampaignStore, progress=lambda m: None, *,
         store.manifest["cells"][cid] = d["rec"]
     fleet = store.manifest.setdefault("fleet", {})
     fleet["worker_stats"] = stats
+    # ONE plan derivation serves both the deal pruning and the finished
+    # check: nothing below changes cell status, so the set is stable
+    pending = pending_batches(store)
+    finished = not pending
     if fleet.get("assignments"):
         # the deal only tracks OUTSTANDING work: completed batches drop
         # out, so a finished fleet has an empty deal and a plain resume
         # of it is a no-op rather than an error
-        live = {b.batch_id for b in pending_batches(store)}
+        live = {b.batch_id for b in pending}
         fleet["assignments"] = {bid: w for bid, w
                                 in fleet["assignments"].items()
                                 if bid in live}
@@ -307,17 +430,19 @@ def reconcile(store: CampaignStore, progress=lambda m: None, *,
     if started:
         # cumulative across resume legs: wall_base_s closed out earlier
         # legs, started_ts opened the current one
+        end, stale = _leg_end(roots, float(started), fleet)
         fleet["wall_s"] = round(float(fleet.get("wall_base_s") or 0.0)
-                                + time.time() - float(started), 2)
-        finished = not pending_batches(store)
-        if freeze_clock or finished:
-            # leg over (workers exited) or campaign finished: freeze the
-            # clock so idle calendar time before a later resume never
-            # dilutes util_pct (a SIGKILLed PARENT can still leave
-            # started_ts dangling — a lease/heartbeat is the multi-host
-            # follow-up in ROADMAP.md)
+                                + end - float(started), 2)
+        if freeze_clock or finished or stale:
+            # leg over (workers exited / campaign finished) or stale (a
+            # SIGKILLed PARENT left started_ts dangling; _leg_end closed
+            # it at the newest heartbeat): freeze the clock so idle
+            # calendar time before a later resume never dilutes util_pct
             fleet["wall_base_s"] = fleet["wall_s"]
             fleet.pop("started_ts")
+            if stale:
+                record_event(store, "stale-leg-closed",
+                             wall_s=fleet["wall_s"])
         if finished:
             # drop any checkpoint a worker died too early to clear
             _clear_stale_ckpts(store.root, set())

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.configs.base import ARCH_IDS
 from repro.ppa.nodes import NODES
@@ -81,6 +81,10 @@ class CampaignSpec:
     surrogate_gate: bool = True
     screen_k: int = 4
     gate_threshold: float = TAU_SUR_DEFAULT
+    # fleet launch hint: hosts for the remote worker launcher (slot i runs
+    # on hosts[i % len(hosts)]).  Purely a launch concern — two specs that
+    # differ only in hosts search identically.
+    hosts: Optional[List[str]] = None
 
     def __post_init__(self) -> None:
         unknown = [w for w in self.workloads if w not in ARCH_IDS]
@@ -103,6 +107,11 @@ class CampaignSpec:
         if self.gate_threshold < 0:
             raise ValueError(f"gate_threshold must be >= 0 "
                              f"(got {self.gate_threshold})")
+        if self.hosts is not None and (
+                not self.hosts or any(not isinstance(h, str) or not h.strip()
+                                      for h in self.hosts)):
+            raise ValueError(f"hosts must be a non-empty list of host "
+                             f"names (got {self.hosts!r})")
 
     @property
     def n_cells(self) -> int:
@@ -178,3 +187,23 @@ def plan(spec: CampaignSpec) -> List[CellBatch]:
                 out.append(CellBatch(index=len(out), arch=w, mode=m,
                                      node_nms=tuple(nodes[i:i + per_batch])))
     return out
+
+
+_PLAN_CACHE: Dict[str, List[CellBatch]] = {}
+_PLAN_CACHE_MAX = 32
+
+
+def plan_cached(spec: CampaignSpec) -> List[CellBatch]:
+    """``plan`` memoized per spec (keyed on its canonical dict).
+
+    Fleet-scope operations re-derive the plan constantly — every
+    ``pending_batches`` / ``reconcile`` / supervisor poll needs it — and
+    the batches are frozen dataclasses, so one shared list per spec is
+    safe.  Callers must not mutate the returned list."""
+    key = json.dumps(spec.to_dict(), sort_keys=True)
+    batches = _PLAN_CACHE.get(key)
+    if batches is None:
+        while len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+            _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+        batches = _PLAN_CACHE[key] = plan(spec)
+    return batches

@@ -10,7 +10,9 @@
   the headline "one RL loop retunes itself per node" evidence.
 * ``workers``    — fleet campaigns only: per-worker utilization (cells,
   episodes, busy seconds, busy/fleet-wall percentage), from the stats the
-  reconciler folds into the manifest's ``fleet`` block.
+  reconciler folds into the manifest's ``fleet`` block, plus the
+  supervision event log (evictions, mid-run re-deals, stale-leg
+  closures) so a healed run is auditable from the report alone.
 """
 from __future__ import annotations
 
@@ -25,6 +27,8 @@ CELL_COLS = ("cell_id", "mesh", "fetch", "vlen", "wmem_kb", "dmem_kb",
 ADAPT_COLS = ("node_nm", "mesh", "fetch", "vlen", "wmem_kb", "dmem_kb",
               "freq_mhz", "tok_s", "power_mw", "area_mm2", "ppa_score")
 WORKER_COLS = ("worker", "cells", "episodes", "busy_s", "util_pct")
+EVENT_COLS = ("ts", "kind", "worker", "from_worker", "to_worker",
+              "reason", "batches")
 
 
 def _fmt(v) -> str:
@@ -114,14 +118,22 @@ def write_reports(store, out_dir: Optional[str] = None) -> Dict[str, str]:
 
     workers = worker_rows(store)
     if workers:
+        fleet = store.manifest.get("fleet") or {}
+        events = list(fleet.get("events") or [])
         paths["workers_json"] = os.path.join(out_dir, "workers.json")
         with open(paths["workers_json"], "w") as f:
-            json.dump(workers, f, indent=1, allow_nan=False)
+            json.dump(dict(workers=workers, events=events), f, indent=1,
+                      allow_nan=False)
         paths["workers_md"] = os.path.join(out_dir, "workers.md")
-        wall = (store.manifest.get("fleet") or {}).get("wall_s")
+        wall = fleet.get("wall_s")
         with open(paths["workers_md"], "w") as f:
             f.write(f"# Campaign `{store.manifest['name']}` — per-worker "
                     f"utilization ({len(workers)} workers, "
                     f"fleet wall {_fmt(wall)}s)\n\n")
             f.write(markdown_table(workers, WORKER_COLS))
+            if events:
+                f.write(f"\n## Supervision events ({len(events)})\n\n")
+                f.write(markdown_table(
+                    [dict(e, batches=",".join(e.get("batches") or [])
+                          or None) for e in events], EVENT_COLS))
     return paths

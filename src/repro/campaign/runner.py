@@ -18,7 +18,8 @@ from __future__ import annotations
 import time
 from typing import Callable, Dict, List, Optional
 
-from repro.campaign.planner import CampaignSpec, Cell, CellBatch, plan
+from repro.campaign.planner import (CampaignSpec, Cell, CellBatch, plan,
+                                    plan_cached)
 from repro.campaign.report import write_reports
 from repro.campaign.store import CampaignStore
 from repro.configs import get_config
@@ -145,7 +146,7 @@ def run_campaign(root: str, spec: Optional[CampaignSpec] = None, *,
         if spec is None:
             raise ValueError("a CampaignSpec is required to start a campaign")
         store = CampaignStore.create(root, spec)
-    batches = plan(spec)
+    batches = plan_cached(spec)
     t0 = time.time()
     n_done = 0
     for batch in batches:

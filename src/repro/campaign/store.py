@@ -21,18 +21,24 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import socket
 import subprocess
-import tempfile
 import time
 from typing import Dict, List, Optional
 
 from repro.campaign.planner import CampaignSpec, Cell, CellBatch
-from repro.core.fsutil import fsync_dir
+from repro.core import fsutil
 from repro.core.pareto import ArchiveEntry, ParetoArchive
 
 STATUS_PENDING = "pending"
 STATUS_RUNNING = "running"
 STATUS_DONE = "done"
+
+# liveness lease defaults (fleet workers; see write_lease below).  A
+# worker refreshes its lease every ttl/4, so one missed refresh never
+# looks like death; the supervisor treats ``now - ts > ttl`` as expired.
+LEASE_NAME = "lease.json"
+DEFAULT_LEASE_TTL_S = 15.0
 
 
 def _git_sha() -> str:
@@ -45,28 +51,56 @@ def _git_sha() -> str:
         return "unknown"
 
 
-def _atomic_write_json(path: str, payload: Dict) -> None:
-    """tmp-write -> fsync -> rename -> dir fsync.
+# the atomic tmp-write -> fsync -> rename -> dir-fsync sequence lives in
+# repro.core.fsutil so the lease files and checkpoint manager share it
+_atomic_write_json = fsutil.atomic_write_json
 
-    The fsync BEFORE ``os.replace`` is load-bearing: without it a power
-    loss after the rename can leave ``path`` pointing at a tmp file whose
-    data blocks never hit disk — a truncated file shadowing a valid
-    manifest.  With it, the rename atomically publishes fully-durable
-    bytes, so a reader always sees either the old or the new manifest."""
-    d = os.path.dirname(os.path.abspath(path))
-    os.makedirs(d, exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=d, prefix=".tmp_manifest_")
+
+# ----------------------------------------------------------------- leases
+def lease_path(worker_dir: str) -> str:
+    return os.path.join(worker_dir, LEASE_NAME)
+
+
+def write_lease(worker_dir: str, *, worker: int, batch: Optional[str],
+                ttl_s: float, done: bool = False) -> Dict:
+    """Refresh worker ``worker``'s liveness lease under its run directory.
+
+    The lease is the fleet's only liveness channel that crosses hosts: it
+    lives in the shared run directory, so a supervisor anywhere on the
+    shared filesystem can observe (pid, host, ts, current batch) without
+    a process handle.  Written atomically+durably so a reader never sees
+    a torn lease and a power-lost refresh leaves the previous one."""
+    lease = dict(worker=int(worker), pid=os.getpid(),
+                 host=socket.gethostname(), ts=time.time(),
+                 batch=batch, ttl_s=float(ttl_s), done=bool(done))
+    fsutil.atomic_write_json(lease_path(worker_dir), lease)
+    return lease
+
+
+def read_lease(worker_dir: str) -> Optional[Dict]:
+    """The worker's last lease, or None if it never wrote one (a torn or
+    unreadable lease also reads as None — the refresh is atomic, so that
+    only happens for pre-lease worker dirs)."""
     try:
-        with os.fdopen(fd, "w") as f:
-            json.dump(payload, f, indent=1, allow_nan=False)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, path)
-        fsync_dir(d)
-    except Exception:
-        if os.path.exists(tmp):
-            os.remove(tmp)
-        raise
+        with open(lease_path(worker_dir)) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def lease_expired(lease: Optional[Dict], *, now: Optional[float] = None,
+                  ttl_s: Optional[float] = None) -> bool:
+    """True when the lease-holder must be presumed dead: no refresh within
+    the TTL (the lease's own, unless ``ttl_s`` overrides).  A missing
+    lease is NOT expired — the worker may still be booting; callers gate
+    that case on spawn time.  A ``done`` lease never expires: the worker
+    finished and stopped refreshing on purpose."""
+    if lease is None or lease.get("done"):
+        return False
+    ttl = float(ttl_s if ttl_s is not None
+                else lease.get("ttl_s") or DEFAULT_LEASE_TTL_S)
+    return (now if now is not None else time.time()) \
+        - float(lease.get("ts") or 0.0) > ttl
 
 
 def _read_jsonl(path: str) -> List[Dict]:
@@ -98,6 +132,7 @@ class CampaignStore:
     def __init__(self, root: str, manifest: Dict):
         self.root = root
         self.manifest = manifest
+        self._spec: Optional[CampaignSpec] = None
 
     # ------------------------------------------------------------ lifecycle
     @classmethod
@@ -131,7 +166,12 @@ class CampaignStore:
 
     @property
     def spec(self) -> CampaignSpec:
-        return CampaignSpec.from_dict(self.manifest["spec"])
+        # parsed once per store: the manifest's spec never mutates, and
+        # fleet-scope operations (pending_batches, reconcile) hit this on
+        # every poll tick
+        if self._spec is None:
+            self._spec = CampaignSpec.from_dict(self.manifest["spec"])
+        return self._spec
 
     # ------------------------------------------------------------ cell state
     def status(self, cell: Cell) -> str:

@@ -1,10 +1,14 @@
-"""Durable-write helpers shared by the campaign store and checkpoint
-manager.  Crash-safety-critical: the atomic tmp-write -> fsync -> rename
--> dir-fsync sequence both modules rely on is only power-loss safe if
-the data hits disk BEFORE the rename publishes it."""
+"""Durable-write helpers shared by the campaign store, checkpoint
+manager and fleet lease files.  Crash-safety-critical: the atomic
+tmp-write -> fsync -> rename -> dir-fsync sequence these modules rely on
+is only power-loss safe if the data hits disk BEFORE the rename
+publishes it."""
 from __future__ import annotations
 
+import json
 import os
+import tempfile
+from typing import Dict
 
 
 def fsync_file(path: str) -> None:
@@ -15,6 +19,31 @@ def fsync_file(path: str) -> None:
         os.fsync(fd)
     finally:
         os.close(fd)
+
+
+def atomic_write_json(path: str, payload: Dict) -> None:
+    """tmp-write -> fsync -> rename -> dir fsync.
+
+    The fsync BEFORE ``os.replace`` is load-bearing: without it a power
+    loss after the rename can leave ``path`` pointing at a tmp file whose
+    data blocks never hit disk — a truncated file shadowing a valid
+    manifest.  With it, the rename atomically publishes fully-durable
+    bytes, so a reader always sees either the old or the new file."""
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".tmp_" +
+                               os.path.basename(path) + "_")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1, allow_nan=False)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        fsync_dir(d)
+    except Exception:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
 
 
 def fsync_dir(path: str) -> None:

@@ -108,6 +108,13 @@ def run(arch: str, *, nodes: List[int], mode: str, episodes: int,
     return rows
 
 
+def _parse_hosts(s: Optional[str]) -> Optional[List[str]]:
+    """--hosts comma list -> cleaned host names (None if flag absent)."""
+    if s is None:
+        return None
+    return [h.strip() for h in s.split(",") if h.strip()]
+
+
 def validate_args(ap: argparse.ArgumentParser,
                   a: argparse.Namespace) -> None:
     """Reject invalid flag combinations up front with a one-line error
@@ -144,6 +151,28 @@ def validate_args(ap: argparse.ArgumentParser,
     if a.workers is not None and not (a.campaign or a.resume):
         ap.error("--workers shards a campaign across worker processes; "
                  "pass --campaign (or --resume) with it")
+    fleet_flags = [n for n, v in (("--hosts", a.hosts),
+                                  ("--launch-template", a.launch_template),
+                                  ("--lease-ttl", a.lease_ttl))
+                   if v is not None]
+    if a.no_supervise:
+        fleet_flags.append("--no-supervise")
+    if fleet_flags and a.workers is None and not a.resume:
+        ap.error(f"{'/'.join(fleet_flags)} configure fleet campaigns; "
+                 "pass --workers (or --resume) with them")
+    if a.lease_ttl is not None and a.lease_ttl <= 0:
+        ap.error(f"--lease-ttl must be > 0 seconds (got {a.lease_ttl})")
+    if a.hosts is not None and not _parse_hosts(a.hosts):
+        ap.error(f"--hosts must be a comma list of host names "
+                 f"(got {a.hosts!r})")
+    if a.launch_template is not None and (
+            "{root}" not in a.launch_template
+            or "{worker}" not in a.launch_template):
+        ap.error("--launch-template must reference {root} and {worker} "
+                 f"(got {a.launch_template!r})")
+    if a.launch_template is not None and "{host}" in a.launch_template \
+            and a.hosts is None:
+        ap.error("--launch-template references {host}; pass --hosts too")
     if a.campaign and a.resume:
         ap.error("--campaign starts a new run and --resume continues an "
                  "existing one; pass exactly one")
@@ -201,19 +230,50 @@ def main(argv: Optional[List[str]] = None) -> None:
                          "many shared-nothing worker processes "
                          "(repro.launch.fleet); with --resume, overrides "
                          "the manifest's recorded worker count")
+    ap.add_argument("--hosts", default=None,
+                    help="comma list of hosts for fleet workers (slot i "
+                         "runs on hosts[i %% len]); implies the ssh "
+                         "launch template unless --launch-template is "
+                         "given; the grid file's 'hosts' key is the "
+                         "fallback")
+    ap.add_argument("--launch-template", default=None,
+                    help="command template spawning one fleet worker, "
+                         "e.g. 'ssh {host} python -m repro.launch.fleet "
+                         "--root {root} --worker {worker}'; {python} "
+                         "expands to the local interpreter")
+    ap.add_argument("--lease-ttl", type=float, default=None,
+                    help="fleet worker lease TTL in seconds (default 15): "
+                         "a worker silent for longer is presumed dead and "
+                         "its pending batches are re-dealt mid-run")
+    ap.add_argument("--no-supervise", action="store_true",
+                    help="disable the elastic fleet supervisor: dead "
+                         "workers' batches are NOT re-dealt mid-run; "
+                         "recover manually with --resume")
     ap.add_argument("--verbose", action="store_true")
     a = ap.parse_args(argv)
     validate_args(ap, a)
     if a.campaign or a.resume:
         import dataclasses
         from repro.campaign import CampaignSpec, run_campaign
+        hosts = _parse_hosts(a.hosts)
+        fleet_kw = dict(lease_ttl_s=a.lease_ttl,
+                        supervise=not a.no_supervise)
+        if a.launch_template or hosts:
+            from repro.launch.fleet import make_launcher
+            fleet_kw["launcher"] = make_launcher(a.launch_template, hosts)
         if a.resume:
             with open(os.path.join(a.resume, "manifest.json")) as f:
                 manifest = json.load(f)
             if a.workers is not None or manifest.get("fleet"):
                 from repro.launch.fleet import run_fleet
-                run_fleet(a.resume, workers=a.workers, resume=True)
+                run_fleet(a.resume, workers=a.workers, resume=True,
+                          **fleet_kw)
             else:
+                if hosts or a.launch_template or a.lease_ttl is not None \
+                        or a.no_supervise:
+                    ap.error(f"{a.resume} is a single-process campaign; "
+                             "fleet flags need --workers N to upgrade it "
+                             "to a fleet on resume")
                 run_campaign(a.resume, resume=True)
         else:
             try:
@@ -234,7 +294,7 @@ def main(argv: Optional[List[str]] = None) -> None:
                 # any explicit --workers (including 1) runs the fleet
                 # layout, matching what --resume --workers produces
                 from repro.launch.fleet import run_fleet
-                run_fleet(root, spec, workers=a.workers)
+                run_fleet(root, spec, workers=a.workers, **fleet_kw)
             else:
                 run_campaign(root, spec)
         return

@@ -1,44 +1,77 @@
-"""Fleet launcher: shared-nothing multi-process campaign workers.
+"""Fleet launcher + supervisor: self-healing multi-process campaign
+workers.
 
 ``repro.launch.dse --campaign grid.yaml --workers W`` routes here.  The
 planner's cell batches are dealt deterministically to W workers
-(``repro.campaign.distrib.shard_batches``); each worker is spawned as
+(``repro.campaign.distrib.shard_batches``); each worker is spawned
+through a :class:`Launcher` — locally as
 
     python -m repro.launch.fleet --root <run-dir> --worker <i>
 
-and runs its own ``run_search_cells`` loop with its own checkpoints under
-``<run-dir>/worker-<i>/``.  The parent waits, then reconciles the worker
-manifests and archives into the top-level manifest and writes the report
-(incl. the per-worker utilization table).  ``--resume`` works at fleet
-scope: completed cells are never re-run, dead workers' unfinished batches
-are re-dealt to the new worker set, and in-flight checkpoints are
-relocated so a resumed batch restores bit-for-bit.
+or on a remote host via a command template (``--launch-template`` /
+``--hosts``, e.g. ``ssh {host} python -m repro.launch.fleet --root
+{root} --worker {worker}``) — and runs its own ``run_search_cells`` loop
+with its own checkpoints under ``<run-dir>/worker-<i>/``.
+
+**Lease/heartbeat protocol**: every worker refreshes
+``worker-<i>/lease.json`` (pid, host, ts, current batch) on a short
+interval through the fsync'd atomic writer, so liveness is observable
+from the shared run directory alone — no process handle needed.
+
+**Supervisor** (the default ``FleetHandle.wait()``): polls worker
+handles AND leases, incrementally reconciles each finished worker's
+results, and when a worker dies — observed exit, or lease expired on a
+hung one (which is then killed) — re-deals its still-pending batches to
+a FRESH worker slot mid-run, relocating in-flight checkpoints with the
+same machinery a fleet ``--resume`` uses, so the re-dealt batch restores
+bit-for-bit and the final fingerprint matches an uninterrupted run.
+Evictions and re-deals are recorded as events in the manifest's fleet
+block and surface in ``report/workers.*``.  Per-batch re-deals are
+capped (``max_redeals``) so a deterministically-crashing batch cannot
+respawn forever; what cannot be healed is left pending for ``--resume``.
+
+``wait(supervise=False)`` keeps the fire-and-reconcile behavior: no
+re-deals, but it still polls with a timeout instead of blocking
+sequentially and reconciles each worker's results as soon as that worker
+exits.
 
 Workers share a persistent XLA compile cache (env
-``REPRO_FLEET_COMPILE_CACHE``, default ``<run-dir>/.jax_cache``) so W
-processes pay for one compile of the shared search step, not W.
+``REPRO_FLEET_COMPILE_CACHE``, default ``<run-dir>/.jax_cache``; set it
+to an empty string to disable) so W processes pay for one compile of the
+shared search step, not W.
 
 Workers only ever touch the shared run directory, so the same layout
-shards across hosts: run ``python -m repro.launch.fleet --root <shared-
-dir> --worker <i>`` on each host against a shared filesystem and
-reconcile with ``--resume`` (or ``repro.campaign.distrib.reconcile``).
+shards across hosts over a shared filesystem: the command-template
+launcher just runs the worker entry point remotely.  A zombie remote
+worker that outlives its lease writes only bit-identical results (batch
+seeds are global), so a re-deal can never fork the campaign's outcome.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import os
+import shlex
 import signal
 import subprocess
 import sys
+import time
 from typing import Dict, List, Optional
 
 COMPILE_CACHE_ENV = "REPRO_FLEET_COMPILE_CACHE"
 
+#: default remote template; ``{python}`` resolves to the LOCAL
+#: interpreter path and is usually wrong across hosts — the default
+#: assumes ``python`` on the remote PATH imports repro.
+DEFAULT_REMOTE_TEMPLATE = ("ssh {host} python -m repro.launch.fleet "
+                           "--root {root} --worker {worker}")
+
 
 class FleetError(RuntimeError):
-    """One or more workers exited non-zero (results so far are reconciled;
-    rerun with --resume to re-deal the unfinished batches)."""
+    """One or more workers exited non-zero / timed out and the campaign
+    could not be healed (results so far are reconciled; rerun with
+    --resume to re-deal the unfinished batches)."""
 
 
 def enable_compile_cache(path: str) -> None:
@@ -70,25 +103,175 @@ def _worker_env(root: str) -> Dict[str, str]:
     return env
 
 
+# ---------------------------------------------------------------- launchers
+@dataclasses.dataclass
+class WorkerProc:
+    """One spawned worker: the process handle plus its spawn timestamp
+    (the supervisor's boot-grace reference before the first lease)."""
+    proc: subprocess.Popen
+    spawned_ts: float
+
+    def poll(self) -> Optional[int]:
+        return self.proc.poll()
+
+    def wait(self, timeout: Optional[float] = None) -> int:
+        return self.proc.wait(timeout)
+
+    def send_signal(self, sig: int) -> None:
+        self.proc.send_signal(sig)
+
+    @property
+    def returncode(self) -> Optional[int]:
+        return self.proc.returncode
+
+    @property
+    def pid(self) -> int:
+        return self.proc.pid
+
+
+class Launcher:
+    """Spawns one worker process for a slot.  Implementations must leave
+    the worker's protocol untouched: the child runs ``repro.launch.fleet
+    --root <root> --worker <idx>`` against the shared run directory."""
+
+    def to_config(self) -> Optional[Dict]:
+        """Serializable form recorded in the fleet block (None = local),
+        so a ``--resume`` respawns workers the same way."""
+        return None
+
+    def spawn(self, root: str, idx: int,
+              env: Optional[Dict[str, str]] = None) -> WorkerProc:
+        raise NotImplementedError
+
+    def _popen(self, cmd: List[str], root: str, idx: int,
+               env: Optional[Dict[str, str]]) -> WorkerProc:
+        from repro.campaign.distrib import worker_root
+        wroot = worker_root(root, idx)
+        os.makedirs(wroot, exist_ok=True)
+        with open(os.path.join(wroot, "worker.log"), "ab") as log:
+            proc = subprocess.Popen(cmd, env=env, stdout=log,
+                                    stderr=subprocess.STDOUT)
+        return WorkerProc(proc=proc, spawned_ts=time.time())
+
+
+class LocalLauncher(Launcher):
+    """Default: worker subprocesses on this machine."""
+
+    def spawn(self, root: str, idx: int,
+              env: Optional[Dict[str, str]] = None) -> WorkerProc:
+        return self._popen(
+            [sys.executable, "-m", "repro.launch.fleet",
+             "--root", root, "--worker", str(idx)], root, idx, env)
+
+
+class CommandLauncher(Launcher):
+    """Spawn workers through a command template (ssh, srun, kubectl ...).
+
+    ``template`` is formatted with ``{host}``, ``{root}``, ``{worker}``
+    and ``{python}`` then shlex-split; slot ``i`` runs on
+    ``hosts[i % len(hosts)]`` (re-dealt fresh slots rotate over the same
+    hosts).  The local process is the transport (e.g. the ssh client):
+    its exit code stands in for the remote worker's, and killing it does
+    NOT kill a hung remote — the lease protocol is what makes such a
+    zombie harmless (it only ever writes bit-identical results)."""
+
+    def __init__(self, template: str, hosts: Optional[List[str]] = None):
+        if "{root}" not in template or "{worker}" not in template:
+            raise ValueError(
+                "launch template must reference {root} and {worker} "
+                f"(got {template!r})")
+        if "{host}" in template and not hosts:
+            raise ValueError("launch template references {host} but no "
+                             "hosts were given")
+        self.template = template
+        self.hosts = list(hosts) if hosts else None
+
+    def to_config(self) -> Optional[Dict]:
+        return dict(template=self.template, hosts=self.hosts)
+
+    def command(self, root: str, idx: int) -> List[str]:
+        host = self.hosts[idx % len(self.hosts)] if self.hosts else ""
+        return shlex.split(self.template.format(
+            host=host, root=root, worker=idx, python=sys.executable))
+
+    def spawn(self, root: str, idx: int,
+              env: Optional[Dict[str, str]] = None) -> WorkerProc:
+        return self._popen(self.command(root, idx), root, idx, env)
+
+
+def make_launcher(template: Optional[str] = None,
+                  hosts: Optional[List[str]] = None) -> Launcher:
+    """Launcher from CLI/grid inputs: a template (and optional hosts)
+    or hosts alone (default ssh template); neither = local processes."""
+    if template:
+        return CommandLauncher(template, hosts)
+    if hosts:
+        return CommandLauncher(DEFAULT_REMOTE_TEMPLATE, hosts)
+    return LocalLauncher()
+
+
+# ------------------------------------------------------------- fleet handle
 @dataclasses.dataclass
 class FleetHandle:
-    """A launched fleet: the worker processes plus finalization.
+    """A launched fleet: the worker processes plus supervision.
 
-    ``wait()`` blocks until every worker exits, reconciles the worker run
-    directories into the top-level manifest, writes reports, and returns
-    the top-level store — raising :class:`FleetError` afterwards if any
-    worker failed (the reconcile still happened, so a follow-up
-    ``--resume`` only re-deals what is genuinely unfinished)."""
+    ``wait()`` runs the elastic supervisor by default: it polls handles
+    and leases, reconciles finished workers' results incrementally, and
+    re-deals dead/hung workers' pending batches to fresh slots mid-run —
+    raising :class:`FleetError` only if the campaign could not be healed.
+    ``wait(supervise=False)`` polls without re-dealing (reconciling
+    opportunistically as workers exit) and raises if any worker failed,
+    pointing at ``--resume``."""
     root: str
-    procs: Dict[int, subprocess.Popen]
+    procs: Dict[int, WorkerProc]
     progress: object = print
+    launcher: Launcher = dataclasses.field(default_factory=LocalLauncher)
+    poll_s: float = 0.2
+    boot_grace_s: float = 120.0
 
     def kill(self, idx: int, sig: int = signal.SIGKILL) -> None:
         self.procs[idx].send_signal(sig)
 
-    def wait(self, raise_on_failure: bool = True):
-        for p in self.procs.values():
-            p.wait()
+    # ------------------------------------------------------------- waiting
+    def wait(self, raise_on_failure: bool = True, *,
+             supervise: bool = True, timeout: Optional[float] = None,
+             max_redeals: int = 2):
+        if supervise:
+            return self._supervise(raise_on_failure, timeout, max_redeals)
+        return self._wait_plain(raise_on_failure, timeout)
+
+    def _reconcile_now(self, store=None):
+        """Incremental reconcile (workers may still be running: torn
+        JSONL tails are skipped, the manifest flip is atomic, and only
+        this parent writes the top-level manifest)."""
+        from repro.campaign.distrib import reconcile
+        from repro.campaign.store import CampaignStore
+        store = store or CampaignStore.open(self.root)
+        reconcile(store, progress=self.progress)
+        return store
+
+    def _wait_plain(self, raise_on_failure: bool, timeout: Optional[float]):
+        """Poll (not block) until every worker exits, reconciling each
+        worker's results as soon as IT exits — a hung worker no longer
+        defers reconciliation of the finished ones.  ``timeout`` bounds
+        the whole wait; on expiry the workers are left running and
+        :class:`FleetError` is raised."""
+        deadline = None if timeout is None else time.time() + timeout
+        live = dict(self.procs)
+        while live:
+            for idx in sorted(live):
+                if live[idx].poll() is not None:
+                    del live[idx]
+                    self._reconcile_now()
+            if not live:
+                break
+            if deadline is not None and time.time() > deadline:
+                raise FleetError(
+                    f"fleet wait timed out after {timeout}s with "
+                    f"worker(s) {sorted(live)} still running; they were "
+                    f"left alive — kill() them or --resume {self.root} "
+                    "later")
+            time.sleep(self.poll_s)
         store = finalize_fleet(self.root, progress=self.progress)
         failed = {i: p.returncode for i, p in self.procs.items()
                   if p.returncode != 0}
@@ -97,6 +280,128 @@ class FleetHandle:
                 f"worker(s) {sorted(failed)} exited non-zero "
                 f"({failed}); completed cells are reconciled — rerun with "
                 f"--resume {self.root} to re-deal the unfinished batches")
+        return store
+
+    # ---------------------------------------------------------- supervisor
+    def _supervise(self, raise_on_failure: bool, timeout: Optional[float],
+                   max_redeals: int):
+        """The elastic loop: leases + handles in, re-deals out."""
+        from repro.campaign import distrib
+        from repro.campaign.store import (DEFAULT_LEASE_TTL_S,
+                                          CampaignStore, lease_expired,
+                                          read_lease)
+        store = CampaignStore.open(self.root)
+        fleet = store.manifest.get("fleet") or {}
+        ttl = float(fleet.get("lease_ttl_s") or DEFAULT_LEASE_TTL_S)
+        deadline = None if timeout is None else time.time() + timeout
+        live = dict(self.procs)
+        next_slot = max(live, default=-1) + 1
+        redeals: Dict[str, int] = {}
+        unhealed = False
+        next_lease_check = 0.0
+        while live:
+            # handles are polled every tick; leases only need checking at
+            # TTL granularity (a worker refreshes every ttl/4), so the
+            # steady-state supervisor stays out of the shared FS
+            now = time.time()
+            check_leases = now >= next_lease_check
+            if check_leases:
+                next_lease_check = now + max(self.poll_s, ttl / 4.0)
+            for idx in sorted(live):
+                h = live[idx]
+                rc = h.poll()
+                now = time.time()
+                lease = (read_lease(distrib.worker_root(self.root, idx))
+                         if check_leases and rc is None else None)
+                if lease and float(lease.get("ts") or 0.0) < h.spawned_ts:
+                    # leftover from a previous leg's occupant of this
+                    # slot dir, not this process: judging the fresh
+                    # worker by it would SIGKILL it mid-boot.  Boot
+                    # grace governs until ITS first beat lands.
+                    lease = None
+                hung = rc is None and check_leases and (
+                    lease_expired(lease, now=now, ttl_s=ttl)
+                    or (lease is None
+                        and now - h.spawned_ts > self.boot_grace_s))
+                if rc is None and not hung:
+                    continue
+                if hung:
+                    # lease expired but the process handle lives: a hung
+                    # worker (or a dead remote behind a live transport).
+                    # Evict it — after a full TTL of silence it either
+                    # cannot write anymore or will only write
+                    # bit-identical results.
+                    h.send_signal(signal.SIGKILL)
+                    try:
+                        h.wait(timeout=10.0)
+                    except Exception:
+                        pass
+                    rc = h.poll()
+                del live[idx]
+                self._reconcile_now(store)
+                # reconcile pruned the deal to pending-only batches, so
+                # what still maps to this slot is exactly what it lost
+                assignments = store.manifest["fleet"]["assignments"]
+                mine = sorted(b for b, w in assignments.items()
+                              if w == idx)
+                if rc == 0 and not mine:
+                    continue                     # clean, complete exit
+                reason = "lease-expired" if hung else f"exit-{rc}"
+                distrib.record_event(store, "evict", worker=idx,
+                                     reason=reason, returncode=rc,
+                                     pending=mine)
+                gave_up = [b for b in mine
+                           if redeals.get(b, 0) >= max_redeals]
+                todo = [b for b in mine if b not in gave_up]
+                if gave_up:
+                    unhealed = True
+                    distrib.record_event(store, "gave-up", worker=idx,
+                                         batches=gave_up,
+                                         max_redeals=max_redeals)
+                    self.progress(
+                        f"[fleet] giving up on batch(es) {gave_up} after "
+                        f"{max_redeals} re-deal(s); left pending for "
+                        "--resume")
+                if todo:
+                    new_idx = next_slot
+                    next_slot += 1
+                    for b in todo:
+                        redeals[b] = redeals.get(b, 0) + 1
+                    distrib.redeal_batches(store, todo, new_idx)
+                    distrib.record_event(store, "redeal", from_worker=idx,
+                                         to_worker=new_idx, batches=todo,
+                                         reason=reason)
+                    f = store.manifest["fleet"]
+                    if "started_ts" not in f:
+                        # the reconcile above may have closed the leg as
+                        # stale (evicting the LAST hung worker happens a
+                        # full TTL after its final beat) — reopen it for
+                        # the fresh worker so its run is billed
+                        f["wall_base_s"] = float(f.get("wall_s") or 0.0)
+                        f["started_ts"] = time.time()
+                    store.save_manifest()
+                    self.progress(
+                        f"[fleet] worker {idx} down ({reason}); re-dealt "
+                        f"{len(todo)} batch(es) to fresh slot {new_idx}")
+                    wp = self.launcher.spawn(self.root, new_idx,
+                                             _worker_env(self.root))
+                    live[new_idx] = self.procs[new_idx] = wp
+                else:
+                    store.save_manifest()        # publish the events
+            if not live:
+                break
+            if deadline is not None and time.time() > deadline:
+                raise FleetError(
+                    f"fleet supervision timed out after {timeout}s with "
+                    f"worker(s) {sorted(live)} still running")
+            time.sleep(self.poll_s)
+        store = finalize_fleet(self.root, progress=self.progress)
+        if raise_on_failure and (unhealed or not store.all_done()):
+            pend = [b.batch_id for b in distrib.pending_batches(store)]
+            raise FleetError(
+                f"fleet could not be fully healed: batch(es) {pend} "
+                f"still pending after supervision; completed cells are "
+                f"reconciled — rerun with --resume {self.root}")
         return store
 
 
@@ -117,43 +422,69 @@ def finalize_fleet(root: str, progress=print):
 
 
 def launch_fleet(root: str, spec=None, *, workers: Optional[int] = None,
-                 resume: bool = False, progress=print) -> FleetHandle:
-    """Deal the campaign's batches to ``workers`` local worker processes.
+                 resume: bool = False, progress=print,
+                 launcher: Optional[Launcher] = None,
+                 lease_ttl_s: Optional[float] = None) -> FleetHandle:
+    """Deal the campaign's batches to ``workers`` worker processes.
 
     Fresh launch needs ``spec``; ``resume=True`` reopens ``root``
     (reconciling first, re-dealing pending batches, relocating
-    checkpoints).  Returns a :class:`FleetHandle`; call ``.wait()``."""
+    checkpoints).  ``launcher`` defaults to local subprocesses — on
+    resume, a launcher recorded in the fleet block (command template +
+    hosts) is reused unless one is passed explicitly.  Returns a
+    :class:`FleetHandle`; call ``.wait()``."""
     from repro.campaign import distrib
+    from repro.campaign.store import DEFAULT_LEASE_TTL_S
+    if workers is not None and workers < 1:
+        raise ValueError(f"workers must be >= 1 (got {workers})")
+    if lease_ttl_s is not None and lease_ttl_s <= 0:
+        raise ValueError(f"lease_ttl_s must be > 0 (got {lease_ttl_s})")
     if resume:
-        store = distrib.plan_resume(root, workers)
+        store = distrib.plan_resume(root, workers,
+                                    lease_ttl_s=lease_ttl_s)
     else:
         if spec is None:
             raise ValueError("a CampaignSpec is required to start a fleet")
-        store = distrib.create_fleet(root, spec, int(workers or 1))
-    assignments = store.manifest["fleet"]["assignments"]
+        store = distrib.create_fleet(
+            root, spec, int(workers or 1),
+            lease_ttl_s=(lease_ttl_s if lease_ttl_s is not None
+                         else DEFAULT_LEASE_TTL_S))
+    fleet = store.manifest["fleet"]
+    if launcher is None:
+        cfg = fleet.get("launcher")
+        if cfg:
+            launcher = CommandLauncher(cfg["template"], cfg.get("hosts"))
+        elif getattr(store.spec, "hosts", None):
+            launcher = make_launcher(hosts=store.spec.hosts)
+        else:
+            launcher = LocalLauncher()
+    if fleet.get("launcher") != launcher.to_config():
+        fleet["launcher"] = launcher.to_config()
+        store.save_manifest()
+    assignments = fleet["assignments"]
     env = _worker_env(root)
-    procs: Dict[int, subprocess.Popen] = {}
+    procs: Dict[int, WorkerProc] = {}
     for idx in sorted(set(assignments.values())):
-        wroot = distrib.worker_root(root, idx)
-        os.makedirs(wroot, exist_ok=True)
-        with open(os.path.join(wroot, "worker.log"), "ab") as log:
-            procs[idx] = subprocess.Popen(
-                [sys.executable, "-m", "repro.launch.fleet",
-                 "--root", root, "--worker", str(idx)],
-                env=env, stdout=log, stderr=subprocess.STDOUT)
+        procs[idx] = launcher.spawn(root, idx, env)
     n_batches = len(assignments)
     progress(f"[fleet] {store.manifest['name']}: {len(procs)} workers x "
              f"{n_batches} batches"
              + (" (resume)" if resume else "")
              + (": nothing pending" if not n_batches else ""))
-    return FleetHandle(root=root, procs=procs, progress=progress)
+    return FleetHandle(root=root, procs=procs, progress=progress,
+                       launcher=launcher)
 
 
 def run_fleet(root: str, spec=None, *, workers: Optional[int] = None,
-              resume: bool = False, progress=print):
+              resume: bool = False, progress=print,
+              launcher: Optional[Launcher] = None,
+              lease_ttl_s: Optional[float] = None, supervise: bool = True,
+              max_redeals: int = 2):
     """launch_fleet + wait: the blocking one-call fleet run."""
     return launch_fleet(root, spec, workers=workers, resume=resume,
-                        progress=progress).wait()
+                        progress=progress, launcher=launcher,
+                        lease_ttl_s=lease_ttl_s
+                        ).wait(supervise=supervise, max_redeals=max_redeals)
 
 
 def main(argv: Optional[List[str]] = None) -> None:
@@ -165,7 +496,34 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--worker", type=int, required=True,
                     help="this worker's slot index in the manifest deal")
     a = ap.parse_args(argv)
+    if a.worker < 0:
+        ap.error(f"--worker must be >= 0 (got {a.worker})")
+    manifest_path = os.path.join(a.root, "manifest.json")
+    if not os.path.isfile(manifest_path):
+        ap.error(f"--root: no campaign manifest at {manifest_path}")
+    # validate on the raw manifest: importing repro.campaign here would
+    # pull in jax BEFORE enable_compile_cache below, and jax's persistent
+    # compile cache silently stays off if it initializes first — every
+    # worker would then pay a full recompile (measured ~2x batch time)
+    with open(manifest_path) as f:
+        fleet = json.load(f).get("fleet")
+    if not fleet:
+        ap.error(f"--root {a.root} is not a fleet campaign (no fleet "
+                 "block in manifest.json); launch it with --workers "
+                 "via repro.launch.dse first")
+    slots = sorted(set((fleet.get("assignments") or {}).values()))
+    if a.worker not in slots:
+        desc = (f"slots with work: {slots}" if slots
+                else "the deal is empty — campaign complete")
+        ap.error(f"--worker {a.worker} has no batches in the recorded "
+                 f"deal ({desc}); re-deal with repro.launch.dse "
+                 "--resume --workers N")
     cache = os.environ.get(COMPILE_CACHE_ENV)
+    if cache is None:
+        # default matches the parent launcher, so a bare (multi-host)
+        # worker invocation shares the fleet's compile cache too; set
+        # the env var to an empty string to disable
+        cache = os.path.join(os.path.abspath(a.root), ".jax_cache")
     if cache:
         enable_compile_cache(cache)
     from repro.campaign.distrib import run_worker

@@ -164,7 +164,9 @@ def test_fleet_w2_matches_w1_bitwise(tmp_path, fleet_cache):
 
     # per-worker utilization table: one row per worker, busy time recorded
     with open(os.path.join(store.root, "report", "workers.json")) as f:
-        rows = json.load(f)
+        report = json.load(f)
+    rows = report["workers"]
+    assert report["events"] == []        # healthy fleet: no supervision
     assert [r["worker"] for r in rows] == ["worker-0", "worker-1"]
     assert sum(r["cells"] for r in rows) == spec.n_cells
     assert all(r["busy_s"] > 0 and r["util_pct"] > 0 for r in rows)
@@ -173,27 +175,35 @@ def test_fleet_w2_matches_w1_bitwise(tmp_path, fleet_cache):
 
 
 # ------------------------------------------------------- chaos kill/resume
+def _wait_for_ckpt(h, root, victim, deadline_s=300):
+    """Block until the victim worker has an in-flight checkpoint (so a
+    kill provably interrupts mid-batch), or it exits."""
+    ckpts = os.path.join(worker_root(root, victim), "ckpt", "*", "step_*")
+    deadline = time.time() + deadline_s
+    while time.time() < deadline and not glob.glob(ckpts) \
+            and h.procs[victim].poll() is None:
+        time.sleep(0.02)
+    assert h.procs[victim].poll() is None and glob.glob(ckpts), \
+        "victim finished before the kill window; raise spec.episodes"
+
+
 def test_chaos_sigkill_worker_resume_bitwise_exact(tmp_path, fleet_cache):
     """Start a 2-worker fleet on the ci_smoke grid, SIGKILL one worker
     mid-batch, fleet --resume with the single survivor: the final merged
     manifest + frontiers must be bitwise identical to an uninterrupted
-    run with the same seeds (checkpoint relocated to the survivor)."""
+    run with the same seeds (checkpoint relocated to the survivor).
+    ``supervise=False`` keeps the supervisor from healing the kill —
+    this is the manual-recovery path."""
     spec = smoke_spec("chaos", episodes=240, checkpoint_every=4)
     ref = run_campaign(str(tmp_path / "ref"), spec, progress=_silent)
 
     root = str(tmp_path / "fleet")
     h = fleet_mod.launch_fleet(root, spec, workers=2, progress=_silent)
     victim = 1
-    ckpts = os.path.join(worker_root(root, victim), "ckpt", "*", "step_*")
-    deadline = time.time() + 300
-    while time.time() < deadline and not glob.glob(ckpts) \
-            and h.procs[victim].poll() is None:
-        time.sleep(0.02)
-    assert h.procs[victim].poll() is None and glob.glob(ckpts), \
-        "victim finished before the kill window; raise spec.episodes"
+    _wait_for_ckpt(h, root, victim)
     h.kill(victim, signal.SIGKILL)
     with pytest.raises(fleet_mod.FleetError, match="--resume"):
-        h.wait()
+        h.wait(supervise=False)
 
     # the kill really interrupted work: the victim's batch is still
     # pending and stays dealt in the manifest
@@ -211,6 +221,45 @@ def test_chaos_sigkill_worker_resume_bitwise_exact(tmp_path, fleet_cache):
     assert fingerprint(store) == fingerprint(ref)
     # the relocated checkpoint was consumed + cleared on batch completion
     assert not glob.glob(os.path.join(root, "worker-*", "ckpt", "*"))
+
+
+# ------------------------------------------- chaos: supervisor self-heal
+def test_chaos_supervisor_redeals_sigkilled_worker(tmp_path, fleet_cache):
+    """SIGKILL a worker mid-batch while the SUPERVISOR is running: its
+    pending batch must be re-dealt to a fresh worker slot automatically
+    (no parent restart, no manual --resume) and the final merged
+    fingerprint must be bitwise identical to an uninterrupted run —
+    the relocated checkpoint restores exactly where the victim died."""
+    spec = smoke_spec("heal", episodes=240, checkpoint_every=4)
+    ref = run_campaign(str(tmp_path / "ref"), spec, progress=_silent)
+
+    root = str(tmp_path / "fleet")
+    h = fleet_mod.launch_fleet(root, spec, workers=2, lease_ttl_s=3.0,
+                               progress=_silent)
+    victim = 1
+    _wait_for_ckpt(h, root, victim)
+    h.kill(victim, signal.SIGKILL)
+    store = h.wait()                     # heals in-flight: NO FleetError
+    assert store.all_done()
+    assert fingerprint(store) == fingerprint(ref)
+
+    # the eviction + re-deal left an audit trail: fleet events in the
+    # manifest, the fresh slot in the report's worker table
+    events = store.manifest["fleet"]["events"]
+    redeals = [e for e in events if e["kind"] == "redeal"]
+    assert redeals and redeals[0]["from_worker"] == victim
+    fresh = redeals[0]["to_worker"]
+    assert fresh not in (0, victim) and fresh in h.procs
+    assert any(e["kind"] == "evict" and e["worker"] == victim
+               for e in events)
+    with open(os.path.join(store.root, "report", "workers.json")) as f:
+        rep = json.load(f)
+    assert any(e["kind"] == "redeal" for e in rep["events"])
+    assert f"worker-{fresh}" in {r["worker"] for r in rep["workers"]}
+    # the fresh worker's final lease reads done (clean exit)
+    lease = json.load(open(os.path.join(worker_root(root, fresh),
+                                        "lease.json")))
+    assert lease["done"] and lease["batch"] is not None
 
 
 # -------------------------------------------------------------------- CLI

@@ -10,6 +10,7 @@ import pytest
 
 import repro.campaign.store as store_mod
 import repro.checkpoint.manager as ckpt_mod
+import repro.core.fsutil as fsutil_mod
 from repro.campaign import CampaignSpec, CampaignStore
 from repro.campaign.planner import Cell
 from repro.core.pareto import ArchiveEntry
@@ -82,11 +83,11 @@ def test_failed_manifest_write_preserves_old_manifest(tmp_path,
             f.write('{"name": "m", "cells": {"tru')
             raise OSError("simulated mid-write crash")
 
-    monkeypatch.setattr(store_mod, "json", TornJson())
+    monkeypatch.setattr(fsutil_mod, "json", TornJson())
     store.manifest["cells"]["x"] = dict(status="pending")
     with pytest.raises(OSError, match="mid-write"):
         store.save_manifest()
-    monkeypatch.setattr(store_mod, "json", json)
+    monkeypatch.setattr(fsutil_mod, "json", json)
     # the published manifest is untouched and no tmp residue remains
     assert open(os.path.join(root, "manifest.json")).read() == old
     assert not [f for f in os.listdir(root) if f.startswith(".tmp_")]
