@@ -1,0 +1,179 @@
+"""Benchmark: fused recommendation scoring vs one dispatch per query.
+
+The Pareto-as-a-service claim under test (``repro.launch.recommend``):
+answering Q concurrent surrogate-fallback queries costs ONE
+``score_query_batch`` jit dispatch — Q x C candidate scorings ride a
+single fused call — where a naive server pays Q dispatches.  The
+benchmark builds a small campaign, mines its archive index, then drives
+the serving scorer both ways over the same query stream:
+
+  * **batched**    — one fused ``score_query_batch`` dispatch over all
+    (Q, C) pairs, as issued by a single ``recommend_batch`` call;
+  * **sequential** — one ``score_query_batch`` dispatch per query, the
+    (1, C) shape a dispatch-per-request server would issue (a subsample
+    of SEQ_N queries, timed and scaled: per-dispatch cost is constant,
+    the subsample keeps the slow leg from dominating bench wall time).
+
+Headline metric is **speedup** at the jit boundary (batched queries/s
+over sequential queries/s) — this isolates exactly the fusion the
+serving layer exists for; per-dispatch overhead is what fusing
+amortizes.  The committed floor is >= 50x (benchmarks/check_floors.py),
+alongside ``one_dispatch`` proving a full end-to-end ``recommend_batch``
+over the same Q queries really issued a single dispatch.  End-to-end
+queries/s through ``recommend_batch`` (python query parsing + answer
+construction included) is reported in the table as ``batched_qps_e2e``
+/ ``sequential_qps_e2e`` for transparency.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_serve
+Knobs: REPRO_BENCH_SERVE_QUERIES (default 1024), .._SEQ (default 32),
+       .._EPISODES (default 32; campaign build budget).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+N_QUERIES = int(os.environ.get("REPRO_BENCH_SERVE_QUERIES", "1024"))
+SEQ_N = int(os.environ.get("REPRO_BENCH_SERVE_SEQ", "32"))
+EPISODES = int(os.environ.get("REPRO_BENCH_SERVE_EPISODES", "32"))
+ARCH = os.environ.get("REPRO_BENCH_SERVE_ARCH", "smollm-135m")
+TARGET_SPEEDUP = 50.0
+
+
+def _queries(index, n: int):
+    """n surrogate-fallback queries: perturbed workload feature vectors
+    (never bitwise-equal to an extracted arch, so every query takes the
+    fused surrogate path) across the known nodes/modes."""
+    from repro.launch.recommend import MODE_WEIGHTS, Query
+    from repro.ppa.nodes import NODES
+
+    base = index.wl_features(ARCH)
+    rng = np.random.default_rng(0)
+    out = []
+    for i in range(n):
+        feats = base * rng.uniform(0.8, 1.25, base.shape).astype(np.float32)
+        out.append(Query(node_nm=NODES[i % len(NODES)],
+                         mode=list(MODE_WEIGHTS)[i % 2], features=feats))
+    return out
+
+
+def bench_rows():
+    import jax
+
+    from repro.campaign import CampaignSpec, run_campaign
+    from repro.launch.recommend import Recommender
+    from repro.ppa.surrogate import score_query_batch
+
+    tmp = tempfile.mkdtemp(prefix="bench_serve_")
+    try:
+        t0 = time.time()
+        spec = CampaignSpec(name="serve", workloads=[ARCH], nodes=[3, 7],
+                            modes=["high_perf"], episodes=EPISODES,
+                            lanes=4, max_envs=8, seed=0, seq_len=256,
+                            batch=1, checkpoint_every=0)
+        root = os.path.join(tmp, "camp")
+        run_campaign(root, spec, progress=lambda _m: None)
+        campaign_s = time.time() - t0
+
+        t0 = time.time()
+        rec = Recommender.build([root])
+        build_s = time.time() - t0
+        queries = _queries(rec.index, N_QUERIES)
+
+        # the exact scoring inputs a recommend_batch over these queries
+        # sends through the jit boundary
+        q_arr = np.stack([rec.index.query_context(q.features, q.node_nm,
+                                                  q.mode)
+                          for q in queries])
+        wts = np.asarray([q.weights for q in queries], np.float32)
+        wts /= wts.sum(axis=1, keepdims=True)
+        pbud = np.full((N_QUERIES,), np.inf, np.float32)
+        mperf = np.zeros((N_QUERIES,), np.float32)
+        params, cand = rec.surrogate.params, rec._cand
+
+        # warm both trace shapes outside the timed region: serving steady
+        # state is what's measured, not XLA compilation of (1, C) / (Q, C)
+        jax.block_until_ready(score_query_batch(
+            params, q_arr[:1], cand, wts[:1], pbud[:1], mperf[:1]))
+        jax.block_until_ready(score_query_batch(
+            params, q_arr, cand, wts, pbud, mperf))
+
+        t0 = time.time()
+        jax.block_until_ready(score_query_batch(
+            params, q_arr, cand, wts, pbud, mperf))
+        batched_s = time.time() - t0
+
+        seq_n = min(SEQ_N, N_QUERIES)
+        t0 = time.time()
+        for i in range(seq_n):
+            jax.block_until_ready(score_query_batch(
+                params, q_arr[i:i + 1], cand, wts[i:i + 1],
+                pbud[i:i + 1], mperf[i:i + 1]))
+        sequential_s = (time.time() - t0) * (N_QUERIES / seq_n)
+
+        # end-to-end service throughput (query parsing + answer
+        # construction included) — informational, and the dispatch-count
+        # proof that one recommend_batch call really fuses everything
+        before = rec.n_dispatches
+        t0 = time.time()
+        answers = rec.recommend_batch(queries)
+        batched_e2e_s = time.time() - t0
+        dispatches = rec.n_dispatches - before
+        assert len(answers) == N_QUERIES
+        assert all(a.source == "surrogate" for a in answers)
+        t0 = time.time()
+        for q in queries[:seq_n]:
+            rec.recommend_batch([q])
+        sequential_e2e_s = (time.time() - t0) * (N_QUERIES / seq_n)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    batched_qps = N_QUERIES / max(batched_s, 1e-9)
+    sequential_qps = N_QUERIES / max(sequential_s, 1e-9)
+    speedup = batched_qps / max(sequential_qps, 1e-9)
+    one_dispatch = dispatches == 1
+
+    out_dir = os.environ.get("REPRO_BENCH_OUT", "experiments/tables")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "bench_serve.json"), "w") as f:
+        json.dump({"queries": N_QUERIES, "seq_sample": seq_n,
+                   "candidates": len(rec.index.candidates),
+                   "cells": len(rec.index.cells), "arch": ARCH,
+                   "episodes_per_cell": EPISODES,
+                   "batched_s": batched_s, "sequential_s": sequential_s,
+                   "batched_qps": batched_qps,
+                   "sequential_qps": sequential_qps,
+                   "speedup": speedup, "floor": TARGET_SPEEDUP,
+                   "dispatches": dispatches, "one_dispatch": one_dispatch,
+                   "batched_qps_e2e": N_QUERIES / max(batched_e2e_s, 1e-9),
+                   "sequential_qps_e2e":
+                       N_QUERIES / max(sequential_e2e_s, 1e-9),
+                   "campaign_s": campaign_s, "index_build_s": build_s},
+                  f, indent=1)
+    return [
+        ("serve_batched", 1e6 * batched_s / N_QUERIES,
+         f"{batched_qps:.0f} q/s fused ({dispatches} dispatch e2e)"),
+        ("serve_sequential", 1e6 * sequential_s / N_QUERIES,
+         f"{sequential_qps:.0f} q/s dispatch-per-query"),
+        ("serve_speedup", 0.0,
+         f"{speedup:.1f}x (floor {TARGET_SPEEDUP:.0f}x)"),
+        ("serve_e2e", 1e6 * batched_e2e_s / N_QUERIES,
+         f"{N_QUERIES / max(batched_e2e_s, 1e-9):.0f} q/s end-to-end"),
+    ]
+
+
+def main() -> None:
+    print(f"# serving benchmark ({N_QUERIES} queries, seq sample {SEQ_N}, "
+          f"campaign {EPISODES} ep/cell)")
+    print("name,us_per_call,derived")
+    for name, us, derived in bench_rows():
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

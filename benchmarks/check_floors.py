@@ -13,6 +13,9 @@ enforces the committed floors:
     (W=4 fleet vs W=1 at >= 8 cores; scaled by achievable parallelism
     below that — one worker already pipelines ~2 cores, so the floor is
     2.5 * min(W, max(1, cores // 2)) / W; see benchmarks.bench_fleet)
+  * ``bench_serve.json``          speedup            >= 50x
+    and ``one_dispatch`` (fused recommendation query batch vs one
+    dispatch per query; see benchmarks.bench_serve)
 
 Exit 0 iff every present table passes and none is missing.  CI runs this
 after the benchmark smoke job so the perf trajectory is regression-gated
@@ -46,6 +49,8 @@ FLOORS = {
     "bench_gated_campaign.json": [("evals_saved_ratio", 2.0, "min"),
                                   ("ppa_within_tol", True, "bool")],
     "bench_fleet.json": [("speedup", _fleet_floor, "min")],
+    "bench_serve.json": [("speedup", 50.0, "min"),
+                         ("one_dispatch", True, "bool")],
 }
 
 

@@ -13,8 +13,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_campaign, bench_fleet,
-                            bench_gated_campaign, bench_vec_env, roofline,
-                            tables)
+                            bench_gated_campaign, bench_serve,
+                            bench_vec_env, roofline, tables)
     from benchmarks.common import BENCH_EPISODES, emit
 
     print(f"# repro benchmarks (episodes/node={BENCH_EPISODES})")
@@ -35,6 +35,7 @@ def main() -> None:
         ("campaign", bench_campaign.bench_rows),
         ("gated_campaign", bench_gated_campaign.bench_rows),
         ("fleet", bench_fleet.bench_rows),
+        ("serve", bench_serve.bench_rows),
     ]
     failures = 0
     t_start = time.time()

@@ -26,10 +26,11 @@ CLI: ``python -m repro.launch.dse --campaign grid.yaml [--workers W]`` /
 from repro.campaign.planner import Cell, CellBatch, CampaignSpec, plan
 from repro.campaign.runner import run_campaign
 from repro.campaign.store import CampaignStore, merge_runs
-from repro.campaign.report import write_reports
+from repro.campaign.report import write_index_report, write_reports
 from repro.campaign.distrib import (fingerprint, reconcile, run_worker,
                                     shard_batches)
 
 __all__ = ["Cell", "CellBatch", "CampaignSpec", "plan", "run_campaign",
-           "CampaignStore", "merge_runs", "write_reports", "fingerprint",
-           "reconcile", "run_worker", "shard_batches"]
+           "CampaignStore", "merge_runs", "write_reports",
+           "write_index_report", "fingerprint", "reconcile", "run_worker",
+           "shard_batches"]

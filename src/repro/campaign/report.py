@@ -13,6 +13,11 @@
   reconciler folds into the manifest's ``fleet`` block, plus the
   supervision event log (evictions, mid-run re-deals, stale-leg
   closures) so a healed run is auditable from the report alone.
+
+``write_index_report`` renders the serving-side view: one row per cell of
+the merged archive index (``repro.launch.recommend``) with frontier size
+and the mode-default ``select()`` winner — what the recommendation
+endpoint will actually answer for that cell.
 """
 from __future__ import annotations
 
@@ -27,6 +32,8 @@ CELL_COLS = ("cell_id", "mesh", "fetch", "vlen", "wmem_kb", "dmem_kb",
 ADAPT_COLS = ("node_nm", "mesh", "fetch", "vlen", "wmem_kb", "dmem_kb",
               "freq_mhz", "tok_s", "power_mw", "area_mm2", "ppa_score")
 WORKER_COLS = ("worker", "cells", "episodes", "busy_s", "util_pct")
+INDEX_COLS = ("cell_id", "frontier", "power_mw", "perf_gops", "area_mm2",
+              "tok_s", "ppa_score")
 EVENT_COLS = ("ts", "kind", "worker", "from_worker", "to_worker",
               "reason", "batches")
 
@@ -136,4 +143,40 @@ def write_reports(store, out_dir: Optional[str] = None) -> Dict[str, str]:
                 f.write(markdown_table(
                     [dict(e, batches=",".join(e.get("batches") or [])
                           or None) for e in events], EVENT_COLS))
+    return paths
+
+
+def index_rows(cells: Dict) -> List[Dict]:
+    """One row per archive-index cell: frontier size + the mode-default
+    scalarized ``select()`` winner the recommendation path serves."""
+    from repro.launch.recommend import MODE_WEIGHTS, split_cell_id
+
+    rows = []
+    for cid in sorted(cells):
+        ar = cells[cid]
+        _, _, mode = split_cell_id(cid)
+        e = ar.select(*MODE_WEIGHTS.get(mode, MODE_WEIGHTS["high_perf"]))
+        row = dict(cell_id=cid, frontier=len(ar))
+        if e is not None:
+            row.update(power_mw=e.power_mw, perf_gops=e.perf_gops,
+                       area_mm2=e.area_mm2, tok_s=e.tok_s,
+                       ppa_score=e.ppa_score)
+        rows.append(row)
+    return rows
+
+
+def write_index_report(store, cells: Dict,
+                       out_dir: Optional[str] = None) -> Dict[str, str]:
+    """Emit the archive-index serving table (JSON + markdown)."""
+    out_dir = out_dir or os.path.join(store.root, "report")
+    os.makedirs(out_dir, exist_ok=True)
+    rows = index_rows(cells)
+    paths = {"index_json": os.path.join(out_dir, "index.json"),
+             "index_md": os.path.join(out_dir, "index.md")}
+    with open(paths["index_json"], "w") as f:
+        json.dump(rows, f, indent=1, allow_nan=False)
+    with open(paths["index_md"], "w") as f:
+        f.write(f"# Campaign `{store.manifest['name']}` — archive index "
+                f"({len(rows)} cells served)\n\n")
+        f.write(markdown_table(rows, INDEX_COLS))
     return paths

@@ -278,6 +278,20 @@ class CampaignStore:
         return {cid: s for cid in self.manifest["cells"]
                 if (s := self.load_summary(cid)) is not None}
 
+    def archive_index(self, extra_roots: Optional[List[str]] = None
+                      ) -> Dict[str, ParetoArchive]:
+        """Merged per-cell frontier index: the serving layer's source of
+        truth (``repro.launch.recommend``).
+
+        Unions this run directory's per-cell archives with those of
+        ``extra_roots`` (other reconciled campaign run dirs over any grid)
+        via :func:`merge_runs` — dominance-filtered, duplicate-free, keyed
+        by ``cell_id``.  Merge semantics persist the union into THIS
+        store's JSONL, so re-opening the primary root after background
+        fleets append new frontiers rebuilds an up-to-date index and the
+        extra roots never need re-reading."""
+        return merge_runs(self, list(extra_roots or []))
+
     # ----------------------------------------------------------- checkpoints
     def ckpt_dir(self, batch_id: str) -> str:
         return os.path.join(self.root, "ckpt", batch_id)

@@ -67,14 +67,22 @@ class ParetoArchive:
         self.n_inserted = 0
 
     def insert(self, entry: ArchiveEntry) -> bool:
-        """Insert if non-dominated; evict newly-dominated entries."""
+        """Insert if non-dominated; evict newly-dominated entries.
+
+        An entry whose objective vector exactly equals an existing one is
+        rejected as a duplicate (the first-seen entry wins): equal vectors
+        are mutually non-dominating, so without the check every
+        ``merge``/``insert_batch`` of overlapping archives would
+        accumulate copies on the frontier — bloating archives and zeroing
+        the crowd-prune pairwise distances."""
         self.n_inserted += 1
         obj = entry.objectives()
         keep = []
         for e in self.entries:
             eo = e.objectives()
-            if _dominates(eo, obj):
-                return False          # dominated by an existing entry
+            if _dominates(eo, obj) or np.array_equal(eo, obj):
+                return False          # dominated by (or duplicate of) an
+                                      # existing entry
             if not _dominates(obj, eo):
                 keep.append(e)
         keep.append(entry)

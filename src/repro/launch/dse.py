@@ -297,6 +297,11 @@ def main(argv: Optional[List[str]] = None) -> None:
                 run_fleet(root, spec, workers=a.workers, **fleet_kw)
             else:
                 run_campaign(root, spec)
+        done_root = a.resume or root
+        print(f"[dse] campaign archives are queryable: python -m "
+              f"repro.launch.recommend --root {done_root} --node <nm> "
+              f"--mode <high_perf|low_power> [--arch <zoo-id>] "
+              f"(or --serve for the HTTP endpoint)")
         return
     nodes = list(NODES) if a.nodes == "all" else [
         int(x) for x in a.nodes.split(",")]

@@ -26,27 +26,40 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
           mesh=None, greedy: bool = True):
     cfg = get_reduced(arch) if reduced else get_config(arch)
     mesh = mesh or make_test_mesh()
-    key = jax.random.PRNGKey(seed)
+    # dedicated streams: reusing one key for params, prompts AND context
+    # correlates weights with inputs (and makes the three draws identical
+    # noise up to shape), which skews any numerics derived from them
+    k_params, k_prompts, k_ctx = jax.random.split(jax.random.PRNGKey(seed), 3)
     with mesh_context(mesh):
-        params = lm.init_params(key, cfg)
+        params = lm.init_params(k_params, cfg)
         cache_len = prompt_len + gen_tokens
-        prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab)
+        prompts = jax.random.randint(k_prompts, (batch, prompt_len), 0,
+                                     cfg.vocab)
         ctx = None
         if cfg.n_context_tokens or cfg.is_encdec:
             n = cfg.n_audio_frames if cfg.is_encdec else cfg.n_context_tokens
-            ctx = (jax.random.normal(key, (batch, n, cfg.d_model))
+            ctx = (jax.random.normal(k_ctx, (batch, n, cfg.d_model))
                    * 0.1).astype(L.dtype_of(cfg.param_dtype))
 
+        # inputs land on device before the clock starts, and the clock only
+        # stops once the prefill actually finished: without block_until_ready
+        # the async dispatch returns immediately and t_prefill measures
+        # Python call overhead, not compute
+        jax.block_until_ready((params, prompts, ctx))
         t0 = time.time()
         logits, caches = jax.jit(
             lambda p, t, c: lm.prefill(p, cfg, t, c))(params, prompts, ctx)
-        caches = lm.extend_caches(caches, cfg, cache_len)
+        jax.block_until_ready(logits)
         t_prefill = time.time() - t0
+        caches = lm.extend_caches(caches, cfg, cache_len)
 
         step = jax.jit(lambda p, tok, c, pos: lm.decode_step(p, cfg, tok, c, pos))
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         out_tokens = [tok]
         flush = jax.jit(lambda c: lm.flush_tails(c, cfg))
+        # same discipline for the decode leg: the first-token argmax must
+        # not leak into the decode timestamp
+        jax.block_until_ready(tok)
         t0 = time.time()
         for i in range(gen_tokens - 1):
             logits, caches = step(params, tok, caches, jnp.asarray(prompt_len + i))
@@ -64,14 +77,108 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
     return gen, tok_s
 
 
+def recommend_server(roots, *, host: str = "127.0.0.1", port: int = 8177,
+                     recommender=None, poll: bool = False, on_ready=None):
+    """Always-on Pareto-as-a-service endpoint over campaign archives.
+
+    GET ``/healthz`` reports index size; POST ``/recommend`` takes
+    ``{"queries": [{...}, ...]}`` (see ``repro.launch.recommend.Query``)
+    and answers the whole batch with all surrogate fallbacks fused into
+    one jit dispatch, returning ``{"answers": [...], "dispatches": k}``.
+    ``poll=True`` serves a single request then returns (tests);
+    ``on_ready(srv)`` fires once the socket is bound (``port=0`` picks an
+    ephemeral port, readable as ``srv.server_port``).
+    """
+    import json
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    from repro.launch.recommend import Query, Recommender
+
+    rec = recommender or Recommender.build(list(roots))
+    # jit dispatches mutate shared trace caches; serialize query batches
+    import threading
+    lock = threading.Lock()
+
+    class Handler(BaseHTTPRequestHandler):
+        def log_message(self, fmt, *args):  # quiet: stderr stays for errors
+            pass
+
+        def _reply(self, code: int, payload: dict) -> None:
+            body = json.dumps(payload).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def do_GET(self):
+            if self.path != "/healthz":
+                self._reply(404, {"error": f"no route {self.path}"})
+                return
+            self._reply(200, {
+                "status": "ok",
+                "cells": len(rec.index.cells),
+                "candidates": len(rec.index.candidates),
+                "dispatches": rec.n_dispatches,
+            })
+
+        def do_POST(self):
+            if self.path != "/recommend":
+                self._reply(404, {"error": f"no route {self.path}"})
+                return
+            try:
+                n = int(self.headers.get("Content-Length", 0))
+                req = json.loads(self.rfile.read(n) or b"{}")
+                queries = [Query.from_dict(d)
+                           for d in req.get("queries", [])]
+                if not queries:
+                    raise ValueError("request carries no queries")
+                with lock:
+                    before = rec.n_dispatches
+                    answers = rec.recommend_batch(queries)
+                    used = rec.n_dispatches - before
+                self._reply(200, {
+                    "answers": [a.to_dict() for a in answers],
+                    "dispatches": used,
+                })
+            except (ValueError, TypeError, json.JSONDecodeError) as e:
+                self._reply(400, {"error": str(e)})
+
+    srv = ThreadingHTTPServer((host, port), Handler)
+    print(f"[serve] recommendation server on http://{host}:{srv.server_port}"
+          f" ({len(rec.index.cells)} cells, "
+          f"{len(rec.index.candidates)} candidates)")
+    if on_ready is not None:
+        on_ready(srv)
+    try:
+        if poll:
+            srv.handle_request()
+        else:
+            srv.serve_forever()
+    finally:
+        srv.server_close()
+    return srv
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--recommend", action="append", default=[],
+                    metavar="ROOT",
+                    help="campaign run dir; start the recommendation "
+                         "server instead of the decode loop (repeatable)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8177)
     a = ap.parse_args()
+    if a.recommend:
+        recommend_server(a.recommend, host=a.host, port=a.port)
+        return
+    if not a.arch:
+        ap.error("--arch is required (or pass --recommend ROOT)")
     serve(a.arch, reduced=a.reduced, batch=a.batch, prompt_len=a.prompt_len,
           gen_tokens=a.gen)
 

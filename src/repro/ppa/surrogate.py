@@ -28,9 +28,10 @@ TARGET_WEIGHTS = jnp.array([1.0, 1.0, 1.0])
 TAU_SUR_DEFAULT = 0.05
 
 
-def init_params(rng: jax.Array, in_dim: int) -> Dict:
+def init_params(rng: jax.Array, in_dim: int,
+                hidden: Tuple[int, int] = SUR_HIDDEN) -> Dict:
     k1, k2, k3 = jax.random.split(rng, 3)
-    h1, h2 = SUR_HIDDEN
+    h1, h2 = hidden
 
     def dense(key, n_in, n_out):
         return dict(w=jax.random.normal(key, (n_in, n_out)) * jnp.sqrt(2.0 / n_in),
@@ -88,9 +89,10 @@ class Surrogate:
     n_updates: int = 0
 
     @classmethod
-    def create(cls, in_dim: int, seed: int = 0, tau_sur: float = TAU_SUR_DEFAULT
-               ) -> "Surrogate":
-        p = init_params(jax.random.PRNGKey(seed), in_dim)
+    def create(cls, in_dim: int, seed: int = 0,
+               tau_sur: float = TAU_SUR_DEFAULT,
+               hidden: Tuple[int, int] = SUR_HIDDEN) -> "Surrogate":
+        p = init_params(jax.random.PRNGKey(seed), in_dim, hidden=hidden)
         return cls(params=p, opt_state=init_opt(p), tau_sur=tau_sur)
 
     def update(self, x: np.ndarray, metrics: np.ndarray) -> float:
@@ -165,6 +167,107 @@ def calib_errors(params: Dict, x: jnp.ndarray,
     return jnp.mean((pred - y) ** 2, axis=-1)
 
 
+# ---------------------------------------------------------------------------
+# Pareto-as-a-service: fused query-batch scoring over an archive index
+# ---------------------------------------------------------------------------
+
+SERVE_HIDDEN = (32, 16)  # serving-sized net: the index surrogate
+# interpolates dozens-to-hundreds of archive points, and at query time
+# its layer-2 GEMM runs Q x C times inside score_query_batch — the
+# online search surrogate's (128, 64) would dominate the fused dispatch
+# for no accuracy gain at index scale
+
+
+def fit_index_surrogate(x: np.ndarray, y_log: np.ndarray, *,
+                        steps: int = 400, seed: int = 0,
+                        minibatch: int = 4096,
+                        hidden: Tuple[int, int] = SERVE_HIDDEN) -> Surrogate:
+    """Fit a fresh surrogate to an archive index's (context, PPA) pairs.
+
+    ``x``: (N, in_dim) serving contexts (log1p-scaled workload features ||
+    node constants || design vector); ``y_log``: (N, 3) log1p-space
+    (power, perf, area) — the objectives the archive measured for those
+    designs.  Reuses the online :func:`train_step` (one jit, ``steps``
+    dispatches at index-build time, zero at query time); datasets larger
+    than ``minibatch`` are subsampled per step with a seed-deterministic
+    stream so two builds of the same index fit identical surrogates.
+    """
+    x = np.asarray(x, np.float32)
+    y = np.asarray(y_log, np.float32)
+    if x.ndim != 2 or y.shape != (x.shape[0], N_TARGETS):
+        raise ValueError(f"fit_index_surrogate: bad shapes {x.shape} / "
+                         f"{y.shape}")
+    sur = Surrogate.create(x.shape[1], seed=seed, hidden=hidden)
+    rng = np.random.default_rng(seed)
+    xd, yd = jnp.asarray(x), jnp.asarray(y)
+    loss = jnp.inf
+    for _ in range(steps):
+        if x.shape[0] > minibatch:
+            pick = rng.integers(0, x.shape[0], size=minibatch)
+            xb, yb = jnp.asarray(x[pick]), jnp.asarray(y[pick])
+        else:
+            xb, yb = xd, yd
+        sur.params, sur.opt_state, loss = train_step(
+            sur.params, sur.opt_state, xb, yb)
+        sur.n_updates += 1
+    sur.resid_var = float(loss) / N_TARGETS
+    return sur
+
+
+@jax.jit
+def score_query_batch(params: Dict, q: jnp.ndarray, cand: jnp.ndarray,
+                      weights: jnp.ndarray, power_budget: jnp.ndarray,
+                      min_perf: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Score every index candidate for every query in ONE fused dispatch.
+
+    The serving-side sibling of :func:`screen_batch`: where screen_batch
+    scores K candidate *actions* per environment inside the search loop,
+    this scores the archive index's C candidate *designs* for Q concurrent
+    recommendation queries — Q x C surrogate evaluations ride one jit call,
+    so thousands of queries cost one dispatch.
+
+    q: (Q, F) per-query context (log1p workload features || node consts);
+    cand: (C, D) log1p candidate design vectors; weights: (Q, 3) normalized
+    (w_perf, w_power, w_area); power_budget: (Q,) mW cap (inf = none);
+    min_perf: (Q,) GOPS floor (0 = none).
+
+    Score is the scalarized log1p PPA proxy of screen_batch (lower =
+    better); candidates whose *predicted* power/perf violate the query's
+    budget are masked to +inf, falling back to the unmasked argmin when a
+    budget excludes every candidate (best-effort answer, flagged by the
+    returned ``within_budget``).  Returns (best_idx (Q,), pred (Q, 3)
+    linear-space (power, perf, area) of the winner, within_budget (Q,)).
+    """
+    # layer 1 split along the input: gelu([q||cand] @ W1) decomposes as
+    # gelu(q @ W1[:F] + cand @ W1[F:]) — the (Q, C, F+D) concat is never
+    # materialized and the big (Q*C, F+D, H1) contraction collapses to two
+    # small GEMMs + a broadcast add, ~2.5x off the dispatch (predict()'s
+    # summation grouping differs, so predictions can drift by float eps
+    # from a concat-then-predict; the surrogate path is an estimate, only
+    # archive answers are bitwise)
+    w1, b1 = params["l1"]["w"], params["l1"]["b"]
+    f = q.shape[-1]
+    h = jax.nn.gelu((q @ w1[:f])[:, None, :]
+                    + (cand @ w1[f:])[None, :, :] + b1)         # (Q, C, H1)
+    h = jax.nn.gelu(h @ params["l2"]["w"] + params["l2"]["b"])
+    pred = h @ params["head"]["w"] + params["head"]["b"]        # (Q, C, 3)
+    # targets are log1p(max(v, 0)) >= 0 by construction — clamp so an
+    # underfit head can't serve negative power/perf/area through expm1
+    pred = jnp.maximum(pred, 0.0)
+    score = (weights[:, None, 1] * pred[..., 0]
+             + weights[:, None, 2] * pred[..., 2]
+             - weights[:, None, 0] * pred[..., 1])
+    ok = ((jnp.expm1(pred[..., 0]) <= power_budget[:, None])
+          & (jnp.expm1(pred[..., 1]) >= min_perf[:, None]))
+    within = ok.any(axis=1)
+    idx = jnp.where(within,
+                    jnp.argmin(jnp.where(ok, score, jnp.inf), axis=1),
+                    jnp.argmin(score, axis=1))
+    sel = jnp.take_along_axis(pred, idx[:, None, None], axis=1)[:, 0]
+    return idx, jnp.expm1(sel), within
+
+
 @dataclasses.dataclass
 class ScreenGate:
     """Per-cell Eq.-66/67 gate state for surrogate-gated screening.
@@ -204,11 +307,22 @@ class ScreenGate:
 
     def observe(self, err_per_cell: np.ndarray, t_env: int) -> None:
         """Fold one dispatch's per-cell calibration error into the EMA and
-        open any cell whose variance just passed below tau (Eq. 67)."""
+        open any cell whose variance just passed below tau (Eq. 67).
+
+        Non-finite errors (a NaN/inf loss from a diverged surrogate batch,
+        or an inf analytic metric on a degenerate design) are skipped for
+        that cell: folding them in would poison the EMA permanently — a
+        NaN seed never compares below tau, so the gate could never open,
+        and an inf seed NaN-propagates through the EMA.  The cell keeps
+        its previous variance (inf until the first finite error) and its
+        gate stays closed, which is the safe direction: closed means every
+        candidate still pays the exact analytic evaluation."""
         err = np.asarray(err_per_cell, np.float64)
+        finite = np.isfinite(err)
         first = ~np.isfinite(self.resid_var)
-        self.resid_var = np.where(
-            first, err, self.ema * self.resid_var + (1.0 - self.ema) * err)
+        upd = np.where(first, err,
+                       self.ema * self.resid_var + (1.0 - self.ema) * err)
+        self.resid_var = np.where(finite, upd, self.resid_var)
         newly = (~self.open) & (self.resid_var < self.tau)
         self.open_at[newly] = t_env
 

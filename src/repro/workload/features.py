@@ -91,3 +91,26 @@ def wl_vector(**kwargs: float) -> np.ndarray:
     for k, val in kwargs.items():
         v[WL_IDX[k]] = val
     return v
+
+
+def as_feature_vector(obj) -> np.ndarray:
+    """Coerce a recommendation-query payload into the WL feature vector.
+
+    Accepts a full ``WL_DIM`` sequence (taken verbatim) or a
+    ``{field_name: value}`` mapping (named fields over zeros, unknown
+    names rejected with the valid list) — the wire format of
+    ``repro.launch.recommend`` / the serve endpoint, where callers
+    describe workloads no campaign has extracted."""
+    if isinstance(obj, dict):
+        unknown = sorted(set(obj) - set(WL_IDX))
+        if unknown:
+            raise ValueError(f"unknown workload feature(s) {unknown}; "
+                             f"known: {WL_FIELDS}")
+        return wl_vector(**{k: float(v) for k, v in obj.items()})
+    v = np.asarray(obj, dtype=np.float32).reshape(-1)
+    if v.shape[0] != WL_DIM:
+        raise ValueError(f"feature vector must have {WL_DIM} entries "
+                         f"(got {v.shape[0]}); field order: {WL_FIELDS}")
+    if not np.all(np.isfinite(v)):
+        raise ValueError("feature vector must be finite")
+    return v

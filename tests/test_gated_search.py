@@ -66,6 +66,23 @@ def test_screen_gate_serde_roundtrip():
     assert g2.resid_var[0] == g.resid_var[0] and np.isinf(g2.resid_var[1])
 
 
+def test_screen_gate_ignores_nonfinite_errors():
+    # regression: a NaN/inf first calibration error must not seed the EMA —
+    # it would poison resid_var forever (nan propagates through every EMA
+    # step; inf can never decay below tau) and the cell could never open
+    g = sur_mod.ScreenGate.create(3, tau=0.5)
+    g.observe(np.array([np.nan, np.inf, 0.4]), t_env=4)
+    assert np.isinf(g.resid_var[0]) and np.isinf(g.resid_var[1])
+    assert g.open.tolist() == [False, False, True]
+    # a later finite error seeds the EMA as if it were the first
+    g.observe(np.array([0.1, 0.2, np.nan]), t_env=9)
+    assert g.resid_var[0] == 0.1 and g.resid_var[1] == 0.2
+    assert g.open.tolist() == [True, True, True]
+    assert g.open_at.tolist() == [9, 9, 4]
+    # cell 2's variance was untouched by its NaN observation
+    assert g.resid_var[2] == 0.4
+
+
 # ---------------------------------------------------- screening kernels
 def test_screen_batch_picks_surrogate_best():
     b, k, sdim = 6, 4, 52

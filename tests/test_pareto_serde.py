@@ -87,3 +87,32 @@ def test_merge_is_idempotent():
     dup = _dedupe(list(twice.entries) + [ArchiveEntry.from_dict(e.to_dict())
                                          for e in ar.entries])
     assert len(dup) == before
+
+
+def test_archive_merge_self_is_noop():
+    """Archive-level duplicate rejection (not just the store's key-based
+    _dedupe): merging a copy of an archive into itself must change
+    nothing — equal objective vectors are mutually non-dominating, so
+    without insert's equality check every copy would land on the
+    frontier."""
+    rng = np.random.default_rng(5)
+    ar = ParetoArchive()
+    ar.insert_batch(_entries(rng, 120))
+    before = [e.to_dict() for e in ar.entries]
+    copy = ParetoArchive.from_dict(ar.to_dict())
+
+    added = ar.merge(copy)
+
+    assert added == 0
+    assert [e.to_dict() for e in ar.entries] == before  # verbatim, in order
+
+
+def test_insert_rejects_equal_objectives():
+    rng = np.random.default_rng(6)
+    e = _entries(rng, 1)[0]
+    ar = ParetoArchive()
+    assert ar.insert(e)
+    dup = ArchiveEntry.from_dict(e.to_dict())
+    dup.cfg = dup.cfg + 1.0   # different design, same objective vector
+    assert not ar.insert(dup)  # first-seen entry wins
+    assert len(ar) == 1 and ar.entries[0] is e

@@ -1,0 +1,36 @@
+"""Serving driver numerics: the timing fixes must yield usable metrics.
+
+Regression for two serve.py defects: ``t_prefill`` read without blocking
+on the async dispatch (measured Python call overhead, not compute) and
+one PRNG key reused for params/prompts/context (correlated draws).
+"""
+import jax
+import numpy as np
+
+from repro.launch import serve as serve_mod
+
+
+def test_serve_reports_finite_positive_tok_s():
+    gen, tok_s = serve_mod.serve("smollm-135m", reduced=True, batch=1,
+                                 prompt_len=4, gen_tokens=3, seed=0)
+    assert np.isfinite(tok_s) and tok_s > 0
+    assert gen.shape == (1, 3)
+    assert gen.dtype == np.int32
+    # greedy decode over a real vocab: tokens are valid ids
+    assert (gen >= 0).all()
+
+
+def test_serve_splits_prng_streams():
+    # params, prompts and context must come from distinct streams — with a
+    # shared key the three draws are identical noise up to shape
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 3)
+    draws = [np.asarray(jax.random.uniform(kk, (4,))) for kk in ks]
+    assert not np.array_equal(draws[0], draws[1])
+    assert not np.array_equal(draws[1], draws[2])
+    # the driver uses exactly this discipline (source-level check keeps the
+    # regression from silently reverting to a single reused key)
+    import inspect
+    src = inspect.getsource(serve_mod.serve)
+    assert "jax.random.split" in src
+    assert "block_until_ready(logits)" in src
