@@ -16,6 +16,9 @@ enforces the committed floors:
   * ``bench_serve.json``          speedup            >= 50x
     and ``one_dispatch`` (fused recommendation query batch vs one
     dispatch per query; see benchmarks.bench_serve)
+  * ``bench_obs.json``            overhead_pct       <= 5%
+    (vec-engine search loop with tracing + lease-cadence metric
+    snapshots enabled vs telemetry dark; see benchmarks.bench_obs)
 
 Exit 0 iff every present table passes and none is missing.  CI runs this
 after the benchmark smoke job so the perf trajectory is regression-gated
@@ -41,8 +44,8 @@ def _fleet_floor(table: dict) -> float:
 
 
 # table file -> list of (metric, floor, direction) requirements;
-# "bool" requires truthiness rather than a numeric floor; a callable
-# floor is evaluated against the loaded table.
+# "min" needs value >= floor, "max" needs value <= ceiling, "bool"
+# requires truthiness; a callable floor is evaluated against the table.
 FLOORS = {
     "bench_vec_env.json": [("speedup", 10.0, "min")],
     "bench_campaign.json": [("speedup", 3.0, "min")],
@@ -51,6 +54,7 @@ FLOORS = {
     "bench_fleet.json": [("speedup", _fleet_floor, "min")],
     "bench_serve.json": [("speedup", 50.0, "min"),
                          ("one_dispatch", True, "bool")],
+    "bench_obs.json": [("overhead_pct", 5.0, "max")],
 }
 
 
@@ -70,6 +74,10 @@ def check(tables_dir: str) -> int:
             if kind == "bool":
                 ok = bool(val)
                 shown = f"{metric}={val}"
+            elif kind == "max":
+                ok = isinstance(val, (int, float)) and val <= floor
+                shown = f"{metric}={val if val is None else round(val, 3)}" \
+                        f" (ceiling {floor})"
             else:
                 ok = isinstance(val, (int, float)) and val >= floor
                 shown = f"{metric}={val if val is None else round(val, 3)}" \

@@ -13,7 +13,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_campaign, bench_fleet,
-                            bench_gated_campaign, bench_serve,
+                            bench_gated_campaign, bench_obs, bench_serve,
                             bench_vec_env, roofline, tables)
     from benchmarks.common import BENCH_EPISODES, emit
 
@@ -36,6 +36,7 @@ def main() -> None:
         ("gated_campaign", bench_gated_campaign.bench_rows),
         ("fleet", bench_fleet.bench_rows),
         ("serve", bench_serve.bench_rows),
+        ("obs", bench_obs.bench_rows),
     ]
     failures = 0
     t_start = time.time()

@@ -37,6 +37,14 @@ filesystem can evict silent workers and ``redeal_batches`` to fresh
 slots mid-run.  The launchers that actually spawn worker processes
 (local subprocess or command-template/ssh) and the supervisor loop live
 in ``repro.launch.fleet``.
+
+Telemetry rides the same channels: each worker appends spans to
+``worker-<i>/trace.jsonl`` and structured log records to
+``worker-<i>/log.jsonl`` (mirrored to stdout, which the launcher already
+redirects to ``worker.log``), and the heartbeat piggybacks a
+``MetricsRegistry`` snapshot onto every lease refresh — so the live
+fleet view (``repro.launch.fleet --status``) needs no new files or
+sockets, just the leases that liveness already requires.
 """
 from __future__ import annotations
 
@@ -54,6 +62,9 @@ from repro.campaign.planner import (CampaignSpec, CellBatch, plan,
 from repro.campaign.store import (DEFAULT_LEASE_TTL_S, STATUS_DONE,
                                   CampaignStore, _git_sha, lease_expired,
                                   merge_runs, read_lease, write_lease)
+from repro.obs import log as obs_log
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 # manifest["cells"][cid] / summary keys that legitimately differ between
 # two bit-identical runs (wall clock, scheduling) — excluded from
@@ -101,6 +112,7 @@ def record_event(store: CampaignStore, kind: str, **fields) -> Dict:
     ev = dict(ts=round(time.time(), 3), kind=kind, **fields)
     store.manifest.setdefault("fleet", {}).setdefault(
         "events", []).append(ev)
+    obs_trace.instant(kind, cat="fleet", **fields)
     return ev
 
 
@@ -130,9 +142,11 @@ def redeal_batches(store: CampaignStore, batch_ids: List[str],
     fleet ``--resume`` uses, so the re-dealt batch restores bit-for-bit).
     The caller saves the manifest — typically together with the event
     that triggered the re-deal."""
-    moves = {bid: new_idx for bid in batch_ids}
-    _relocate_ckpts(store.root, moves)
-    store.manifest["fleet"]["assignments"].update(moves)
+    with obs_trace.span("redeal_batches", cat="fleet",
+                        batches=list(batch_ids), to_worker=new_idx):
+        moves = {bid: new_idx for bid in batch_ids}
+        _relocate_ckpts(store.root, moves)
+        store.manifest["fleet"]["assignments"].update(moves)
 
 
 def plan_resume(root: str, workers: Optional[int] = None, *,
@@ -223,20 +237,30 @@ class Heartbeat:
     writer, so liveness is observable from the shared run directory
     alone.  ``beat(batch_id)`` both updates the advertised batch and
     refreshes immediately; ``stop()`` writes a final ``done`` lease so a
-    clean exit is distinguishable from silent death."""
+    clean exit is distinguishable from silent death.
+
+    When given a ``registry``, every refresh piggybacks its snapshot onto
+    the lease's ``metrics`` field — the transport behind the live fleet
+    status view.  Snapshots are taken outside any search code path and
+    never touch RNG streams."""
 
     def __init__(self, worker_dir: str, idx: int,
-                 ttl_s: float = DEFAULT_LEASE_TTL_S):
+                 ttl_s: float = DEFAULT_LEASE_TTL_S,
+                 registry: "Optional[obs_metrics.MetricsRegistry]" = None):
         self.worker_dir, self.idx = worker_dir, idx
         self.ttl_s = float(ttl_s)
+        self.registry = registry
         self.batch: Optional[str] = None
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
     def _write(self, done: bool = False) -> None:
         try:
+            snap = (self.registry.snapshot()
+                    if self.registry is not None else None)
             write_lease(self.worker_dir, worker=self.idx,
-                        batch=self.batch, ttl_s=self.ttl_s, done=done)
+                        batch=self.batch, ttl_s=self.ttl_s, done=done,
+                        metrics=snap)
         except OSError:
             # a transient shared-FS hiccup must not kill the search; the
             # next refresh retries and the TTL absorbs one missed beat
@@ -304,7 +328,13 @@ def run_worker(root: str, idx: int, progress=print) -> CampaignStore:
     """One worker's whole life: run every batch the top-level manifest
     deals to slot ``idx``, with its own checkpoints and durable per-cell
     results under ``worker-<idx>/``.  Shared-nothing: the only cross-
-    worker state is the read-only top-level manifest."""
+    worker state is the read-only top-level manifest.
+
+    Installs the process-global tracer (``worker-<idx>/trace.jsonl``) and
+    a structured JSONL logger (``worker-<idx>/log.jsonl``, mirrored to
+    stdout so ``worker.log`` stays human-readable), and feeds the global
+    metrics registry to the heartbeat so every lease refresh carries a
+    live metrics snapshot."""
     from repro.campaign.runner import execute_batch
     top = CampaignStore.open(root)
     fleet = top.manifest.get("fleet")
@@ -314,26 +344,53 @@ def run_worker(root: str, idx: int, progress=print) -> CampaignStore:
     mine = [b for b in plan_cached(top.spec)
             if fleet["assignments"].get(b.batch_id) == idx]
     store = _open_worker_store(root, idx, top, mine)
+    tracer = None if obs_trace.tracing_disabled() else obs_trace.Tracer(
+        os.path.join(store.root, obs_trace.TRACE_NAME),
+        proc=f"worker-{idx}")
+    obs_trace.install_tracer(tracer)
+    wlog = obs_log.JsonlLogger(
+        os.path.join(store.root, obs_log.LOG_NAME)).bind(worker=idx)
+    registry = obs_metrics.global_registry()
+    registry.gauge("worker_index").set(float(idx))
     hb = Heartbeat(store.root, idx,
                    ttl_s=float(fleet.get("lease_ttl_s")
-                               or DEFAULT_LEASE_TTL_S)).start()
+                               or DEFAULT_LEASE_TTL_S),
+                   registry=registry).start()
+    wlog.info("worker started", batches=len(mine), pid=os.getpid())
     try:
         for batch in mine:
             hb.beat(batch.batch_id)
+            registry.counter("batches_started").inc()
             t0 = time.time()
-            n = execute_batch(store, batch, top.spec,
-                              progress=lambda m: progress(f"[w{idx}]{m}"))
+            with obs_trace.span("execute_batch", cat="campaign",
+                                batch=batch.batch_id) as sp:
+                n = execute_batch(
+                    store, batch, top.spec,
+                    progress=lambda m: progress(f"[w{idx}]{m}"),
+                    log=wlog.bind(batch_id=batch.batch_id))
+                sp.set(cells_run=n)
             if n:
                 store.manifest["worker"]["busy_s"] += time.time() - t0
                 store.save_manifest()
-    except BaseException:
+    except BaseException as e:
         # crash path: the final lease must NOT read ``done`` — an exit
         # with work outstanding is what the supervisor evicts on
+        wlog.error("worker crashed", error=repr(e))
         hb.stop(done=False)
+        wlog.close()
+        if tracer is not None:
+            obs_trace.install_tracer(None)
+            tracer.close()
         raise
     hb.stop(done=True)
     progress(f"[w{idx}] done: {len(mine)} batches, "
              f"busy {store.manifest['worker']['busy_s']:.1f}s")
+    wlog.info("worker done", batches=len(mine),
+              busy_s=round(store.manifest["worker"]["busy_s"], 2))
+    wlog.close()
+    if tracer is not None:
+        obs_trace.install_tracer(None)
+        tracer.close()
     return store
 
 
@@ -374,6 +431,15 @@ def reconcile(store: CampaignStore, progress=lambda m: None, *,
     parent passes it when its workers have exited), so idle time between
     a failed leg and a later ``--resume`` never dilutes utilization.
     Returns the cell ids newly marked done."""
+    with obs_trace.span("reconcile", cat="fleet",
+                        freeze_clock=freeze_clock) as sp:
+        newly = _reconcile(store, progress, freeze_clock=freeze_clock)
+        sp.set(newly_done=len(newly))
+        return newly
+
+
+def _reconcile(store: CampaignStore, progress, *,
+               freeze_clock: bool) -> List[str]:
     roots = worker_roots(store.root)
     if not roots:
         return []

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import json
 import os
+import time
 from typing import Dict, List, Optional, Sequence
 
 CELL_COLS = ("cell_id", "mesh", "fetch", "vlen", "wmem_kb", "dmem_kb",
@@ -34,8 +35,6 @@ ADAPT_COLS = ("node_nm", "mesh", "fetch", "vlen", "wmem_kb", "dmem_kb",
 WORKER_COLS = ("worker", "cells", "episodes", "busy_s", "util_pct")
 INDEX_COLS = ("cell_id", "frontier", "power_mw", "perf_gops", "area_mm2",
               "tok_s", "ppa_score")
-EVENT_COLS = ("ts", "kind", "worker", "from_worker", "to_worker",
-              "reason", "batches")
 
 
 def _fmt(v) -> str:
@@ -74,6 +73,47 @@ def adaptation_tables(store) -> Dict[str, List[Dict]]:
     for rows in out.values():
         rows.sort(key=lambda r: r["node_nm"] or 0)
     return out
+
+
+def format_event(ev: Dict) -> str:
+    """One human-readable markdown line per supervision event.
+
+    The raw event dicts carry kind-specific fields (``pending`` on an
+    evict, ``batches`` on a re-deal, epoch-float ``ts``); a generic
+    column table rendered them as raw dicts with epoch timestamps.  Here
+    each kind gets a sentence with a wall-clock timestamp and the
+    affected batch ids spelled out; unknown kinds degrade to sorted
+    ``k=v`` pairs so nothing is silently dropped."""
+    ts = time.strftime("%Y-%m-%d %H:%M:%S",
+                       time.localtime(float(ev.get("ts") or 0.0)))
+    kind = ev.get("kind", "?")
+
+    def _ids(key: str) -> str:
+        v = ev.get(key) or []
+        return ", ".join(f"`{b}`" for b in v) if isinstance(v, list) \
+            else f"`{v}`"
+
+    if kind == "evict":
+        pend = (f"pending batch(es) {_ids('pending')}" if ev.get("pending")
+                else "no pending batches")
+        det = (f"worker {ev.get('worker')} evicted "
+               f"({ev.get('reason')}, returncode="
+               f"{ev.get('returncode')}); {pend}")
+    elif kind == "redeal":
+        det = (f"batch(es) {_ids('batches')} re-dealt from worker "
+               f"{ev.get('from_worker')} to fresh slot "
+               f"{ev.get('to_worker')} ({ev.get('reason')})")
+    elif kind == "gave-up":
+        det = (f"gave up on batch(es) {_ids('batches')} from worker "
+               f"{ev.get('worker')} after {ev.get('max_redeals')} "
+               "re-deal(s); left pending for --resume")
+    elif kind == "stale-leg-closed":
+        det = (f"stale wall-clock leg closed at {_fmt(ev.get('wall_s'))}s "
+               "(every lease older than the TTL)")
+    else:
+        extra = {k: v for k, v in ev.items() if k not in ("ts", "kind")}
+        det = ", ".join(f"{k}={v}" for k, v in sorted(extra.items()))
+    return f"- `{ts}` **{kind}** — {det}"
 
 
 def worker_rows(store) -> List[Dict]:
@@ -140,9 +180,7 @@ def write_reports(store, out_dir: Optional[str] = None) -> Dict[str, str]:
             f.write(markdown_table(workers, WORKER_COLS))
             if events:
                 f.write(f"\n## Supervision events ({len(events)})\n\n")
-                f.write(markdown_table(
-                    [dict(e, batches=",".join(e.get("batches") or [])
-                          or None) for e in events], EVENT_COLS))
+                f.write("\n".join(format_event(e) for e in events) + "\n")
     return paths
 
 

@@ -15,6 +15,7 @@ granularities:
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -24,6 +25,8 @@ from repro.campaign.report import write_reports
 from repro.campaign.store import CampaignStore
 from repro.configs import get_config
 from repro.core.search import SearchConfig, SearchResult, run_search_cells
+from repro.obs import log as obs_log
+from repro.obs import trace as obs_trace
 from repro.ppa.analytic import M_IDX
 from repro.ppa import config_space as cs
 from repro.workload.extract import extract
@@ -86,12 +89,15 @@ def _resumed_spec(store: CampaignStore, root: str,
 
 def execute_batch(store: CampaignStore, batch: CellBatch,
                   spec: CampaignSpec,
-                  progress: Callable[[str], None] = lambda m: None) -> int:
+                  progress: Callable[[str], None] = lambda m: None,
+                  log: Optional[obs_log.JsonlLogger] = None) -> int:
     """Run one batch to completion against ``store``: resume any
     checkpoint, persist every cell, clear the batch checkpoint.  Shared
     by the single-process campaign loop and fleet workers
     (``repro.campaign.distrib.run_worker``).  Returns the number of cells
-    completed (0 if none were pending)."""
+    completed (0 if none were pending).  ``log`` (a bound
+    :class:`~repro.obs.log.JsonlLogger`) receives one structured record
+    per completed cell, carrying the caller's context."""
     pending = store.pending_cells(batch)
     if not pending:
         # a kill between the batch's last complete_cell and clear_ckpt
@@ -102,9 +108,16 @@ def execute_batch(store: CampaignStore, batch: CellBatch,
                  batch=spec.batch)
     progress(f"[campaign] {batch.batch_id}: {len(batch.node_nms)} cells "
              f"x {spec.lanes} lanes, {spec.episodes} ep/cell")
+    if log is not None:
+        log.info("batch started", cells=len(batch.node_nms),
+                 lanes=spec.lanes, episodes=spec.episodes)
     done_before = {c.cell_id for c in batch.cells if c not in pending}
     store.mark_running(batch)
-    results = run_batch(store, batch, wl, spec)
+    with obs_trace.span("run_batch", cat="campaign",
+                        batch=batch.batch_id,
+                        cells=len(batch.node_nms)) as sp:
+        results = run_batch(store, batch, wl, spec)
+        sp.set(wall_s=round(sum(r.wall_s for r in results), 3))
     completed = 0
     for cell, res in zip(batch.cells, results):
         if cell.cell_id in done_before:
@@ -114,13 +127,21 @@ def execute_batch(store: CampaignStore, batch: CellBatch,
             # tag) intact
             continue
         summary = cell_summary(cell, res)
-        store.complete_cell(cell, summary, res.archive.entries)
+        with obs_trace.span("complete_cell", cat="campaign",
+                            cell=cell.cell_id):
+            store.complete_cell(cell, summary, res.archive.entries)
         completed += 1
         score = summary["ppa_score"]
         progress(f"[campaign]   {cell.cell_id}: score="
                  f"{'-' if score is None else format(score, '.4f')} "
                  f"frontier={summary['frontier']}")
+        if log is not None:
+            log.bind(cell_id=cell.cell_id).info(
+                "cell done", score=score, frontier=summary["frontier"],
+                episodes=summary["episodes"])
     store.clear_ckpt(batch.batch_id)
+    if log is not None:
+        log.info("batch done", completed=completed)
     return completed
 
 
@@ -149,9 +170,22 @@ def run_campaign(root: str, spec: Optional[CampaignSpec] = None, *,
     batches = plan_cached(spec)
     t0 = time.time()
     n_done = 0
-    for batch in batches:
-        n_done += execute_batch(store, batch, spec, progress)
-    write_reports(store)
+    # single-process campaigns get their own trace at <root>/trace.jsonl;
+    # inside a fleet worker a tracer is already installed and kept
+    own_tracer = None
+    if obs_trace.current_tracer() is None and not obs_trace.tracing_disabled():
+        own_tracer = obs_trace.Tracer(
+            os.path.join(root, obs_trace.TRACE_NAME), proc="campaign")
+        obs_trace.install_tracer(own_tracer)
+    try:
+        for batch in batches:
+            n_done += execute_batch(store, batch, spec, progress)
+        with obs_trace.span("write_reports", cat="campaign"):
+            write_reports(store)
+    finally:
+        if own_tracer is not None:
+            obs_trace.install_tracer(None)
+            own_tracer.close()
     progress(f"[campaign] {store.manifest['name']}: "
              f"{n_done} cells run, all_done={store.all_done()}, "
              f"{time.time() - t0:.1f}s -> {root}")

@@ -62,17 +62,25 @@ def lease_path(worker_dir: str) -> str:
 
 
 def write_lease(worker_dir: str, *, worker: int, batch: Optional[str],
-                ttl_s: float, done: bool = False) -> Dict:
+                ttl_s: float, done: bool = False,
+                metrics: Optional[Dict] = None) -> Dict:
     """Refresh worker ``worker``'s liveness lease under its run directory.
 
     The lease is the fleet's only liveness channel that crosses hosts: it
     lives in the shared run directory, so a supervisor anywhere on the
     shared filesystem can observe (pid, host, ts, current batch) without
     a process handle.  Written atomically+durably so a reader never sees
-    a torn lease and a power-lost refresh leaves the previous one."""
+    a torn lease and a power-lost refresh leaves the previous one.
+
+    ``metrics`` piggybacks a JSON-safe telemetry snapshot
+    (``repro.obs.metrics.MetricsRegistry.snapshot``) on the heartbeat —
+    the live fleet view (``repro.launch.fleet --status``) is aggregated
+    from leases alone, no extra files or sockets."""
     lease = dict(worker=int(worker), pid=os.getpid(),
                  host=socket.gethostname(), ts=time.time(),
                  batch=batch, ttl_s=float(ttl_s), done=bool(done))
+    if metrics is not None:
+        lease["metrics"] = metrics
     fsutil.atomic_write_json(lease_path(worker_dir), lease)
     return lease
 
@@ -214,15 +222,10 @@ class CampaignStore:
         return os.path.join(self.root, "cells", f"{cell_id}.jsonl")
 
     def _torn_tail(self, path: str) -> bool:
-        """True if a previous writer died mid-line (no trailing newline);
+        """True if a previous writer died mid-line (see fsutil.torn_tail);
         the next append then starts on a fresh line so the torn tail stays
         one skippable line instead of corrupting the new record too."""
-        try:
-            with open(path, "rb") as f:
-                f.seek(-1, os.SEEK_END)
-                return f.read(1) != b"\n"
-        except (OSError, ValueError):
-            return False
+        return fsutil.torn_tail(path)
 
     def _append_line(self, cell_id: str, payload: Dict) -> None:
         self.append_lines(cell_id, [payload])

@@ -46,6 +46,19 @@ def atomic_write_json(path: str, payload: Dict) -> None:
         raise
 
 
+def torn_tail(path: str) -> bool:
+    """True if a previous appender died mid-line (no trailing newline).
+    The next append should then start on a fresh line so the torn tail
+    stays one skippable line instead of corrupting the new record too.
+    Shared by the campaign store's cell JSONL and the obs trace writer."""
+    try:
+        with open(path, "rb") as f:
+            f.seek(-1, os.SEEK_END)
+            return f.read(1) != b"\n"
+    except (OSError, ValueError):
+        return False
+
+
 def fsync_dir(path: str) -> None:
     """Persist a rename: fsync the containing directory (no-op where the
     filesystem does not support directory fds)."""

@@ -28,6 +28,8 @@ from repro.core.pareto import ArchiveEntry, ParetoArchive
 from repro.core.partition import partition
 from repro.core.replay import PERBuffer
 from repro.core.state import SAC_STATE_DIM
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.ppa import config_space as cs
 from repro.ppa import surrogate as sur_mod
 from repro.ppa.analytic import M_DIM, M_IDX, evaluate_vec_jit
@@ -438,6 +440,30 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
     if not resumed:
         s = env.reset()      # (B, 52)
 
+    # ---- telemetry: read-only taps on the loop's own state ---------------
+    # Handles hoisted out of the hot loop (one lock+dict hit at creation,
+    # attribute access per dispatch).  Everything below only READS clocks
+    # and counters the loop already maintains — never RNG streams or
+    # checkpoint contents — so results are bitwise identical with
+    # telemetry on or off (test-enforced).
+    _reg = obs_metrics.global_registry()
+    _m_steps = _reg.counter("env_steps_total")
+    _m_screened = _reg.counter("screened_total")
+    _m_evaluated = _reg.counter("evaluated_total")
+    _m_sps = _reg.gauge("env_steps_per_s")
+    _m_gate = _reg.gauge("gate_open_frac")
+    _m_eps = _reg.gauge("search_eps")
+    _m_ent = _reg.gauge("sac_entropy")
+    _m_prio = _reg.gauge("per_max_priority")
+    _m_size = _reg.gauge("per_size")
+    _m_beta = _reg.gauge("per_beta")
+    _m_best = _reg.gauge("best_score")
+    _m_disp = _reg.histogram("dispatch_seconds")
+    # screened/evaluated are cumulative in the gate (and survive resume):
+    # counters track the delta per dispatch so fleet aggregation sums
+    _prev_scr = float(gate.screened.sum())
+    _prev_ev = float(gate.evaluated.sum())
+
     def _checkpoint(t_next: int) -> None:
         seen_keys = [k for c in range(n_cells) for k in seen[c]]
         seen_cell = [c for c in range(n_cells) for _ in seen[c]]
@@ -491,6 +517,7 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
         _save_search_ckpt(checkpoint_dir, t_next, tree, extra)
 
     for t in range(start_t, n_steps):
+        _dt0 = time.time()
         key, k_act, k_upd, k_mpc = jax.random.split(key, 4)
         # ---- action selection: per-element eps-greedy (Alg. 1 l.6) -------
         a_c_rand, a_d_rand = act.random_action_batch(rng, b)
@@ -592,6 +619,29 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
                 ys = np.concatenate(list(sur_y), axis=0)
                 pick = rng.integers(0, len(xs), size=min(256, len(xs)))
                 surrogate.update(xs[pick], ys[pick])
+        # ---- telemetry feed: clocks + loop counters only -----------------
+        _td = time.time() - _dt0
+        _m_disp.observe(_td)
+        _m_steps.inc(b)
+        _m_sps.set(b / _td if _td > 0 else 0.0)
+        _m_gate.set(float(np.mean(gate.open)))
+        _m_eps.set(eps_sched.eps)
+        _m_ent.set(last_entropy)
+        _m_prio.set(float(buf.max_priority))
+        _m_size.set(float(buf.size))
+        _m_beta.set(float(buf.beta))
+        _bb = min(best[c][0] for c in range(n_cells))
+        if np.isfinite(_bb):
+            _m_best.set(float(_bb))
+        _scr, _ev = float(gate.screened.sum()), float(gate.evaluated.sum())
+        _m_screened.inc(_scr - _prev_scr)
+        _m_evaluated.inc(_ev - _prev_ev)
+        _prev_scr, _prev_ev = _scr, _ev
+        if t == start_t:
+            # the first dispatch pays jit compilation — worth a span of
+            # its own on the timeline
+            obs_trace.complete("first_dispatch", _dt0, _td, cat="search",
+                               cells=n_cells, lanes=lanes)
         # ---- epsilon decay: one per per-cell env-step (Eq. 9) ------------
         found = bool(feasible_count.sum() > 0)
         for _ in range(lanes):
@@ -606,6 +656,11 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
                     feasible_count=int(feasible_count[c]),
                     tok_s=float(np.mean(
                         info.metrics[lo:hi, M_IDX["tok_s"]]))))
+            obs_trace.counter("search", env_steps_s=(b / _td if _td > 0
+                                                     else 0.0),
+                              eps=eps_sched.eps,
+                              gate_open_frac=float(np.mean(gate.open)),
+                              feasible=float(feasible_count.sum()))
             if sc.verbose:
                 bb = min(float(best[c][0]) for c in range(n_cells))
                 print(f"  step {t:5d} (ep {t_env}) r={float(np.mean(r)):+.3f} "
@@ -622,11 +677,15 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
         # a resumed run must never execute dispatches the original skipped)
         if checkpoint_dir and checkpoint_every > 0 \
                 and (t + 1) % checkpoint_every == 0 and t + 1 < n_steps:
-            _checkpoint(t + 1)
+            with obs_trace.span("checkpoint", cat="search", step=t + 1):
+                _checkpoint(t + 1)
 
     # ---- final selection per cell: Pareto-scalarized (paper §3.10) -------
     results = []
     wall = time.time() - t0
+    obs_trace.complete("run_search_cells", t0, wall, cat="search",
+                       cells=n_cells, lanes=lanes, episodes=sc.episodes,
+                       env_steps=t_env * n_cells)
     for c, node_nm in enumerate(node_nms):
         sel = archives[c].select(env.w_perf, env.w_power, env.w_area)
         best_cfg = sel.cfg if sel is not None else best[c][1]

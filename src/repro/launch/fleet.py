@@ -45,11 +45,20 @@ shards across hosts over a shared filesystem: the command-template
 launcher just runs the worker entry point remotely.  A zombie remote
 worker that outlives its lease writes only bit-identical results (batch
 seeds are global), so a re-deal can never fork the campaign's outcome.
+
+**Live status** (``python -m repro.launch.fleet --root R --status``):
+renders per-worker throughput / current batch / gate state purely from
+the leases each heartbeat already refreshes — every lease carries a
+metrics snapshot (``repro.obs.metrics``), so the view needs no sockets
+and no extra files, and works for remote workers over the shared FS.
+The supervisor parent also traces to ``<root>/trace.jsonl``; merge it
+with the workers' via ``python -m repro.obs.export --root R``.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import glob
 import json
 import os
 import shlex
@@ -58,6 +67,8 @@ import subprocess
 import sys
 import time
 from typing import Dict, List, Optional
+
+from repro.obs import trace as obs_trace
 
 COMPILE_CACHE_ENV = "REPRO_FLEET_COMPILE_CACHE"
 
@@ -228,17 +239,33 @@ class FleetHandle:
     launcher: Launcher = dataclasses.field(default_factory=LocalLauncher)
     poll_s: float = 0.2
     boot_grace_s: float = 120.0
+    tracer: Optional[object] = None
 
     def kill(self, idx: int, sig: int = signal.SIGKILL) -> None:
         self.procs[idx].send_signal(sig)
+
+    def status(self) -> Dict:
+        """Live fleet view assembled from the workers' leases alone
+        (:func:`fleet_status`)."""
+        return fleet_status(self.root)
 
     # ------------------------------------------------------------- waiting
     def wait(self, raise_on_failure: bool = True, *,
              supervise: bool = True, timeout: Optional[float] = None,
              max_redeals: int = 2):
-        if supervise:
-            return self._supervise(raise_on_failure, timeout, max_redeals)
-        return self._wait_plain(raise_on_failure, timeout)
+        try:
+            if supervise:
+                return self._supervise(raise_on_failure, timeout,
+                                       max_redeals)
+            return self._wait_plain(raise_on_failure, timeout)
+        finally:
+            # the parent trace ends with the supervision, even on a
+            # FleetError path (emit() on a closed tracer is a no-op, so
+            # stray late spans are harmless)
+            if self.tracer is not None:
+                if obs_trace.current_tracer() is self.tracer:
+                    obs_trace.install_tracer(None)
+                self.tracer.close()
 
     def _reconcile_now(self, store=None):
         """Incremental reconcile (workers may still be running: torn
@@ -385,6 +412,8 @@ class FleetHandle:
                         f"{len(todo)} batch(es) to fresh slot {new_idx}")
                     wp = self.launcher.spawn(self.root, new_idx,
                                              _worker_env(self.root))
+                    obs_trace.instant("worker_spawned", cat="fleet",
+                                      worker=new_idx)
                     live[new_idx] = self.procs[new_idx] = wp
                 else:
                     store.save_manifest()        # publish the events
@@ -403,6 +432,98 @@ class FleetHandle:
                 f"still pending after supervision; completed cells are "
                 f"reconciled — rerun with --resume {self.root}")
         return store
+
+
+def fleet_status(root: str, now: Optional[float] = None) -> Dict:
+    """Live fleet view from the shared run directory alone.
+
+    Reads the top-level manifest plus every ``worker-*/lease.json`` —
+    the file each heartbeat already refreshes with a metrics snapshot —
+    so the view needs no sockets, no process handles, and works for
+    remote workers over the shared filesystem.  Each worker row carries
+    its lease state (``live`` / ``stale`` / ``done`` / ``no-lease``),
+    current batch, lease age, and the headline search metrics; the full
+    snapshot rides along under ``metrics`` for callers that want more."""
+    from repro.campaign.store import (DEFAULT_LEASE_TTL_S, lease_expired,
+                                      read_lease)
+    from repro.obs.metrics import snapshot_value
+    with open(os.path.join(root, "manifest.json")) as f:
+        manifest = json.load(f)
+    now = time.time() if now is None else now
+    fleet = manifest.get("fleet") or {}
+    ttl = float(fleet.get("lease_ttl_s") or DEFAULT_LEASE_TTL_S)
+    cells = manifest.get("cells") or {}
+    rows: List[Dict] = []
+    for wdir in sorted(glob.glob(os.path.join(root, "worker-*"))):
+        if not os.path.isdir(wdir):
+            continue
+        name = os.path.basename(wdir)
+        lease = read_lease(wdir)
+        if lease is None:
+            rows.append(dict(worker=name, state="no-lease", batch=None,
+                             age_s=None, metrics=None))
+            continue
+        state = ("done" if lease.get("done")
+                 else "stale" if lease_expired(lease, now=now, ttl_s=ttl)
+                 else "live")
+        snap = lease.get("metrics")
+        rows.append(dict(
+            worker=name, state=state, batch=lease.get("batch"),
+            age_s=round(max(0.0, now - float(lease.get("ts") or 0.0)), 1),
+            pid=lease.get("pid"), host=lease.get("host"),
+            env_steps_s=snapshot_value(snap, "gauges", "env_steps_per_s"),
+            gate_open_frac=snapshot_value(snap, "gauges",
+                                          "gate_open_frac"),
+            eps=snapshot_value(snap, "gauges", "search_eps"),
+            best_score=snapshot_value(snap, "gauges", "best_score"),
+            env_steps=snapshot_value(snap, "counters", "env_steps_total"),
+            batches_started=snapshot_value(snap, "counters",
+                                           "batches_started"),
+            metrics=snap))
+    return dict(
+        root=root, name=manifest.get("name"), lease_ttl_s=ttl,
+        cells_done=sum(1 for r in cells.values()
+                       if r.get("status") == "done"),
+        cells_total=len(cells),
+        pending_batches=len(fleet.get("assignments") or {}),
+        events=len(fleet.get("events") or []),
+        workers=rows)
+
+
+def render_status(status: Dict) -> str:
+    """Human rendering of :func:`fleet_status` (the ``--status`` CLI)."""
+    def _n(v, fmt: str) -> str:
+        return "-" if v is None else format(v, fmt)
+
+    head = (f"fleet {status['name']}: {status['cells_done']}/"
+            f"{status['cells_total']} cells done, "
+            f"{status['pending_batches']} batch(es) dealt, "
+            f"{status['events']} event(s), "
+            f"lease ttl {status['lease_ttl_s']:g}s")
+    workers = status["workers"]
+    if not workers:
+        return head + "\n  (no worker directories yet)"
+    table = [("worker", "state", "batch", "age", "steps/s", "gate",
+              "eps", "env-steps", "best")]
+    for r in workers:
+        table.append((
+            str(r["worker"]), r["state"], str(r.get("batch") or "-"),
+            "-" if r.get("age_s") is None else f"{r['age_s']:.1f}s",
+            _n(r.get("env_steps_s"), ",.0f"),
+            _n(r.get("gate_open_frac"), ".2f"),
+            _n(r.get("eps"), ".3f"),
+            _n(r.get("env_steps"), ",.0f"),
+            _n(r.get("best_score"), ".4f")))
+    widths = [max(len(row[i]) for row in table)
+              for i in range(len(table[0]))]
+    lines = [head] + ["  " + "  ".join(c.ljust(w) for c, w
+                                       in zip(row, widths)).rstrip()
+                      for row in table]
+    live = [r for r in workers if r["state"] == "live"]
+    total = sum(r.get("env_steps_s") or 0.0 for r in live)
+    lines.append(f"  fleet throughput: {total:,.0f} env-steps/s over "
+                 f"{len(live)} live worker(s)")
+    return "\n".join(lines)
 
 
 def finalize_fleet(root: str, progress=print):
@@ -462,17 +583,25 @@ def launch_fleet(root: str, spec=None, *, workers: Optional[int] = None,
         fleet["launcher"] = launcher.to_config()
         store.save_manifest()
     assignments = fleet["assignments"]
+    # the supervisor parent traces to <root>/trace.jsonl (closed when
+    # wait() returns); a caller with its own tracer installed keeps it
+    tracer = None
+    if obs_trace.current_tracer() is None and not obs_trace.tracing_disabled():
+        tracer = obs_trace.Tracer(
+            os.path.join(root, obs_trace.TRACE_NAME), proc="fleet")
+        obs_trace.install_tracer(tracer)
     env = _worker_env(root)
     procs: Dict[int, WorkerProc] = {}
     for idx in sorted(set(assignments.values())):
         procs[idx] = launcher.spawn(root, idx, env)
+        obs_trace.instant("worker_spawned", cat="fleet", worker=idx)
     n_batches = len(assignments)
     progress(f"[fleet] {store.manifest['name']}: {len(procs)} workers x "
              f"{n_batches} batches"
              + (" (resume)" if resume else "")
              + (": nothing pending" if not n_batches else ""))
     return FleetHandle(root=root, procs=procs, progress=progress,
-                       launcher=launcher)
+                       launcher=launcher, tracer=tracer)
 
 
 def run_fleet(root: str, spec=None, *, workers: Optional[int] = None,
@@ -488,19 +617,39 @@ def run_fleet(root: str, spec=None, *, workers: Optional[int] = None,
 
 
 def main(argv: Optional[List[str]] = None) -> None:
-    """Worker entry point (the parent CLI is ``repro.launch.dse``)."""
+    """Worker entry point (the parent CLI is ``repro.launch.dse``), plus
+    the ``--status`` live fleet view."""
     ap = argparse.ArgumentParser(
-        description="fleet worker process (spawned by launch_fleet)")
+        description="fleet worker process (spawned by launch_fleet), or "
+                    "--status for the lease-based live fleet view")
     ap.add_argument("--root", required=True,
                     help="campaign run directory (shared with the parent)")
-    ap.add_argument("--worker", type=int, required=True,
+    ap.add_argument("--worker", type=int, default=None,
                     help="this worker's slot index in the manifest deal")
+    ap.add_argument("--status", action="store_true",
+                    help="render the live fleet view from worker leases "
+                         "and exit (no jax import)")
+    ap.add_argument("--json", action="store_true",
+                    help="with --status: print the raw status dict as "
+                         "JSON instead of the table")
     a = ap.parse_args(argv)
-    if a.worker < 0:
+    if a.status and a.worker is not None:
+        ap.error("--status and --worker are mutually exclusive")
+    if not a.status and a.worker is None:
+        ap.error("--worker is required (or pass --status for the live "
+                 "fleet view)")
+    if a.json and not a.status:
+        ap.error("--json only applies to --status")
+    if a.worker is not None and a.worker < 0:
         ap.error(f"--worker must be >= 0 (got {a.worker})")
     manifest_path = os.path.join(a.root, "manifest.json")
     if not os.path.isfile(manifest_path):
         ap.error(f"--root: no campaign manifest at {manifest_path}")
+    if a.status:
+        status = fleet_status(a.root)
+        print(json.dumps(status, indent=2) if a.json
+              else render_status(status))
+        return
     # validate on the raw manifest: importing repro.campaign here would
     # pull in jax BEFORE enable_compile_cache below, and jax's persistent
     # compile cache silently stays off if it initializes first — every

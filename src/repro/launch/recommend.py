@@ -282,6 +282,10 @@ class Recommender:
         self._cand = jnp.asarray(index.cand_matrix())
         self._cand_cfgs = [c.entry.cfg for c in index.candidates]
         self.n_dispatches = 0
+        # lifetime answer provenance counters (the serve /metrics and
+        # /healthz surfaces read these for the exact-vs-surrogate ratio)
+        self.n_exact = 0
+        self.n_surrogate = 0
 
     @classmethod
     def build(cls, roots: Sequence[str], **kw) -> "Recommender":
@@ -330,6 +334,8 @@ class Recommender:
                 answers[i] = ans
             else:
                 pend.append(i)
+        self.n_exact += len(queries) - len(pend)
+        self.n_surrogate += len(pend)
         if pend:
             # the serving hot loop: everything per-query is vectorized
             # numpy (one log1p over the stacked feature matrix, cached

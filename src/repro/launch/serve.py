@@ -81,23 +81,42 @@ def recommend_server(roots, *, host: str = "127.0.0.1", port: int = 8177,
                      recommender=None, poll: bool = False, on_ready=None):
     """Always-on Pareto-as-a-service endpoint over campaign archives.
 
-    GET ``/healthz`` reports index size; POST ``/recommend`` takes
-    ``{"queries": [{...}, ...]}`` (see ``repro.launch.recommend.Query``)
-    and answers the whole batch with all surrogate fallbacks fused into
-    one jit dispatch, returning ``{"answers": [...], "dispatches": k}``.
-    ``poll=True`` serves a single request then returns (tests);
-    ``on_ready(srv)`` fires once the socket is bound (``port=0`` picks an
-    ephemeral port, readable as ``srv.server_port``).
+    GET ``/healthz`` reports index size + uptime; GET ``/metrics`` serves
+    the process metrics registry in Prometheus text format (request
+    counts per route, exact-vs-surrogate answer counters, fused dispatch
+    count, per-request latency histogram, bad-request count); POST
+    ``/recommend`` takes ``{"queries": [{...}, ...]}`` (see
+    ``repro.launch.recommend.Query``) and answers the whole batch with
+    all surrogate fallbacks fused into one jit dispatch, returning
+    ``{"answers": [...], "dispatches": k}``.  A malformed body — invalid
+    JSON, a non-object, a non-list ``queries`` — is a structured 400,
+    never an empty 500.  ``poll=True`` serves a single request then
+    returns (tests); ``on_ready(srv)`` fires once the socket is bound
+    (``port=0`` picks an ephemeral port, readable as
+    ``srv.server_port``).
     """
     import json
     from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
     from repro.launch.recommend import Query, Recommender
+    from repro.obs import metrics as obs_metrics
 
     rec = recommender or Recommender.build(list(roots))
     # jit dispatches mutate shared trace caches; serialize query batches
     import threading
     lock = threading.Lock()
+    t_started = time.time()
+    reg = obs_metrics.global_registry()
+    m_requests = {p: reg.counter("serve_requests_total",
+                                 labels={"route": p})
+                  for p in ("/healthz", "/metrics", "/recommend", "other")}
+    m_bad = reg.counter("serve_bad_requests_total")
+    m_exact = reg.counter("serve_answers_total",
+                          labels={"source": "archive"})
+    m_surrogate = reg.counter("serve_answers_total",
+                              labels={"source": "surrogate"})
+    m_dispatch = reg.counter("serve_fused_dispatches_total")
+    m_latency = reg.histogram("serve_request_seconds")
 
     class Handler(BaseHTTPRequestHandler):
         def log_message(self, fmt, *args):  # quiet: stderr stays for errors
@@ -111,38 +130,94 @@ def recommend_server(roots, *, host: str = "127.0.0.1", port: int = 8177,
             self.end_headers()
             self.wfile.write(body)
 
+        def _reply_text(self, code: int, text: str) -> None:
+            body = text.encode()
+            self.send_response(code)
+            self.send_header("Content-Type",
+                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def _count(self) -> None:
+            m_requests.get(self.path, m_requests["other"]).inc()
+
         def do_GET(self):
-            if self.path != "/healthz":
-                self._reply(404, {"error": f"no route {self.path}"})
-                return
-            self._reply(200, {
-                "status": "ok",
-                "cells": len(rec.index.cells),
-                "candidates": len(rec.index.candidates),
-                "dispatches": rec.n_dispatches,
-            })
+            t0 = time.time()
+            self._count()
+            try:
+                if self.path == "/healthz":
+                    self._reply(200, {
+                        "status": "ok",
+                        "uptime_s": round(time.time() - t_started, 3),
+                        "cells": len(rec.index.cells),
+                        "candidates": len(rec.index.candidates),
+                        "dispatches": rec.n_dispatches,
+                        "index": {
+                            "seq_len": rec.index.seq_len,
+                            "batch": rec.index.batch,
+                            "answered_exact": rec.n_exact,
+                            "answered_surrogate": rec.n_surrogate,
+                        },
+                    })
+                elif self.path == "/metrics":
+                    self._reply_text(
+                        200, obs_metrics.render_prometheus(reg.snapshot()))
+                else:
+                    self._reply(404, {"error": f"no route {self.path}"})
+            finally:
+                m_latency.observe(time.time() - t0)
 
         def do_POST(self):
-            if self.path != "/recommend":
-                self._reply(404, {"error": f"no route {self.path}"})
-                return
+            t0 = time.time()
+            self._count()
             try:
-                n = int(self.headers.get("Content-Length", 0))
-                req = json.loads(self.rfile.read(n) or b"{}")
-                queries = [Query.from_dict(d)
-                           for d in req.get("queries", [])]
-                if not queries:
-                    raise ValueError("request carries no queries")
-                with lock:
-                    before = rec.n_dispatches
-                    answers = rec.recommend_batch(queries)
-                    used = rec.n_dispatches - before
-                self._reply(200, {
-                    "answers": [a.to_dict() for a in answers],
-                    "dispatches": used,
-                })
-            except (ValueError, TypeError, json.JSONDecodeError) as e:
-                self._reply(400, {"error": str(e)})
+                if self.path != "/recommend":
+                    self._reply(404, {"error": f"no route {self.path}"})
+                    return
+                try:
+                    n = int(self.headers.get("Content-Length", 0))
+                    req = json.loads(self.rfile.read(n) or b"{}")
+                    if not isinstance(req, dict):
+                        raise ValueError(
+                            "request body must be a JSON object, got "
+                            f"{type(req).__name__}")
+                    qd = req.get("queries", [])
+                    if not isinstance(qd, list):
+                        raise ValueError(
+                            "'queries' must be a list of objects, got "
+                            f"{type(qd).__name__}")
+                    queries = []
+                    for i, d in enumerate(qd):
+                        if not isinstance(d, dict):
+                            raise ValueError(
+                                f"queries[{i}] must be a JSON object, "
+                                f"got {type(d).__name__}")
+                        queries.append(Query.from_dict(d))
+                    if not queries:
+                        raise ValueError("request carries no queries")
+                    with lock:
+                        before = rec.n_dispatches
+                        answers = rec.recommend_batch(queries)
+                        used = rec.n_dispatches - before
+                    n_ex = sum(1 for a in answers
+                               if a.source == "archive")
+                    m_exact.inc(n_ex)
+                    m_surrogate.inc(len(answers) - n_ex)
+                    m_dispatch.inc(used)
+                    self._reply(200, {
+                        "answers": [a.to_dict() for a in answers],
+                        "dispatches": used,
+                    })
+                except (ValueError, TypeError, KeyError,
+                        json.JSONDecodeError) as e:
+                    # malformed input is the CLIENT's 400, with a payload
+                    # that says what was wrong — never a bare 500
+                    m_bad.inc()
+                    self._reply(400, {"error": {
+                        "type": type(e).__name__, "message": str(e)}})
+            finally:
+                m_latency.observe(time.time() - t0)
 
     srv = ThreadingHTTPServer((host, port), Handler)
     print(f"[serve] recommendation server on http://{host}:{srv.server_port}"
