@@ -1,0 +1,143 @@
+"""Benchmark: sharded VecDSEEnv fused step across an emulated device mesh.
+
+Measures env-steps/second of the fused analytic step with the batch axis
+sharded over ``REPRO_BENCH_MULTIDEV_DEVICES`` (default 4) devices vs the
+plain single-device jit path, and reports the scaling speedup.  Devices
+are emulated on the host CPU via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — that flag must be
+set before jax imports, so each timed leg runs in a fresh child process
+(both legs under the *same* flags, so only the mesh size differs).
+
+By default each child additionally pins XLA's intra-op threading
+(``--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1``) so
+the measured speedup isolates the data-parallel device axis from XLA's own
+eigen thread pool — on a small CI runner the two would otherwise fight
+over the same cores.  Disable with ``REPRO_BENCH_MULTIDEV_PIN=0``.
+
+Floor (enforced by ``benchmarks.check_floors``): speedup >= 1.8x at 4
+emulated devices when the machine has >= 1 core per device — each emulated
+device executes on its own XLA host thread, so a machine short of
+``devices`` cores cannot scale at all and is gated only against
+pathological slowdown (>= 0.4x; measured ~0.5x on a 1-core box, where the
+mesh serializes and per-shard dispatch overhead is pure cost).  The table
+records ``devices`` and ``cores`` so the gate is self-describing.  Writes
+``experiments/tables/bench_multidev.json``.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_multidev
+Knobs: REPRO_BENCH_MULTIDEV_DEVICES (default 4), .._B (512), .._STEPS (30),
+       .._PIN (1).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+DEVICES = int(os.environ.get("REPRO_BENCH_MULTIDEV_DEVICES", "4"))
+B = int(os.environ.get("REPRO_BENCH_MULTIDEV_B", "512"))
+STEPS = int(os.environ.get("REPRO_BENCH_MULTIDEV_STEPS", "30"))
+PIN = os.environ.get("REPRO_BENCH_MULTIDEV_PIN", "1") != "0"
+NODE_NM = 3
+MULTIDEV_FLOOR = 1.8
+GUARD_FLOOR = 0.4
+
+
+def scaled_floor(devices: int, cores: int) -> float:
+    """The committed floor, scaled by achievable parallelism: 1.8x at 4
+    emulated devices needs one core per device (each device is one XLA
+    host thread); below that only pathological slowdown is gated."""
+    return MULTIDEV_FLOOR if cores >= devices else GUARD_FLOOR
+
+
+# ---------------------------------------------------------------- child --
+def _child(devices_arg: str) -> None:
+    """One timed leg (runs with XLA_FLAGS already fixed by the parent).
+    Prints a single JSON line: {"sps": env-steps/second}."""
+    import numpy as np
+
+    from benchmarks.common import workload
+    from repro.core import actions as act
+    from repro.core.env import VecDSEEnv
+
+    devices = None if devices_arg == "none" else int(devices_arg)
+    wl = workload("llama3.1-8b")
+    env = VecDSEEnv(wl, NODE_NM, batch=B, seed=0, devices=devices)
+    env.reset()
+    rng = np.random.default_rng(0)
+    acts = [act.random_action_batch(rng, B) for _ in range(STEPS)]
+    # two-step warmup: step 1 compiles against the reset() layout, step 2
+    # against the steady-state layout (a sharded step's cfg/ranges come
+    # back mesh-sharded, which keys a second executable)
+    env.step(*acts[0])
+    env.step(*acts[0])
+    t0 = time.time()
+    for a_c, a_d in acts:
+        env.step(a_c, a_d)
+    print(json.dumps({"sps": STEPS * B / (time.time() - t0)}))
+
+
+# --------------------------------------------------------------- parent --
+def _run_leg(devices_arg: str) -> float:
+    env = dict(os.environ)
+    flags = [f"--xla_force_host_platform_device_count={DEVICES}"]
+    if PIN:
+        flags += ["--xla_cpu_multi_thread_eigen=false",
+                  "intra_op_parallelism_threads=1"]
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " "
+                        + " ".join(flags)).strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", env.get("PYTHONPATH", "")) if p)
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_multidev",
+         "--child", devices_arg],
+        env=env, capture_output=True, text=True)
+    if out.returncode != 0:
+        raise RuntimeError(f"bench child (devices={devices_arg}) failed:\n"
+                           f"{out.stdout}\n{out.stderr}")
+    return float(json.loads(out.stdout.strip().splitlines()[-1])["sps"])
+
+
+def bench_rows():
+    sps_1 = _run_leg("none")                 # plain single-device jit
+    sps_n = _run_leg(str(DEVICES))           # mesh of DEVICES
+    speedup = sps_n / sps_1
+    cores = os.cpu_count() or 1
+    out_dir = os.environ.get("REPRO_BENCH_OUT", "experiments/tables")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "bench_multidev.json"), "w") as f:
+        json.dump({"devices": DEVICES, "batch": B, "steps": STEPS,
+                   "pinned": PIN, "cores": cores,
+                   "single_steps_per_s": sps_1,
+                   "sharded_steps_per_s": sps_n,
+                   "speedup": speedup,
+                   "floor": scaled_floor(DEVICES, cores)}, f, indent=1)
+    return [
+        ("multidev_single_b%d" % B, 1e6 / sps_1, f"{sps_1:.1f} env-steps/s"),
+        ("multidev_d%d_b%d" % (DEVICES, B), 1e6 / sps_n,
+         f"{sps_n:.1f} env-steps/s"),
+        ("multidev_speedup", 0.0, f"{speedup:.2f}x"),
+    ]
+
+
+def main() -> None:
+    if len(sys.argv) > 1 and sys.argv[1] == "--child":
+        _child(sys.argv[2])
+        return
+    cores = os.cpu_count() or 1
+    print(f"# multi-device benchmark ({DEVICES} emulated devices on "
+          f"{cores} cores, B={B}, steps={STEPS}, pinned={PIN})")
+    print("name,us_per_call,derived")
+    rows = bench_rows()
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+    speedup = float(rows[-1][2][:-1])
+    floor = scaled_floor(DEVICES, cores)
+    print(f"# speedup {speedup:.2f}x "
+          f"({'PASS' if speedup >= floor else 'FAIL'}: floor {floor}x at "
+          f"{cores} cores)")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,10 @@ enforces the committed floors:
   * ``bench_obs.json``            overhead_pct       <= 5%
     (vec-engine search loop with tracing + lease-cadence metric
     snapshots enabled vs telemetry dark; see benchmarks.bench_obs)
+  * ``bench_multidev.json``       speedup            >= 1.8x
+    (fused env step sharded over 4 emulated host devices vs plain
+    single-device jit, when cores >= devices; gated only against
+    pathological slowdown below that — see benchmarks.bench_multidev)
 
 Exit 0 iff every present table passes and none is missing.  CI runs this
 after the benchmark smoke job so the perf trajectory is regression-gated
@@ -43,6 +47,16 @@ def _fleet_floor(table: dict) -> float:
                         int(table.get("cores", 1)))
 
 
+def _multidev_floor(table: dict) -> float:
+    """Core-aware multi-device floor (see ``bench_multidev.scaled_floor``):
+    full 1.8x where the machine has a core per emulated device, slowdown
+    guard elsewhere.  ``devices``/``cores`` come from the table itself,
+    recorded by ``bench_multidev`` on the machine that produced it."""
+    from benchmarks.bench_multidev import scaled_floor
+    return scaled_floor(int(table.get("devices", 4)),
+                        int(table.get("cores", 1)))
+
+
 # table file -> list of (metric, floor, direction) requirements;
 # "min" needs value >= floor, "max" needs value <= ceiling, "bool"
 # requires truthiness; a callable floor is evaluated against the table.
@@ -55,6 +69,7 @@ FLOORS = {
     "bench_serve.json": [("speedup", 50.0, "min"),
                          ("one_dispatch", True, "bool")],
     "bench_obs.json": [("overhead_pct", 5.0, "max")],
+    "bench_multidev.json": [("speedup", _multidev_floor, "min")],
 }
 
 

@@ -85,6 +85,12 @@ class CampaignSpec:
     # on hosts[i % len(hosts)]).  Purely a launch concern — two specs that
     # differ only in hosts search identically.
     hosts: Optional[List[str]] = None
+    # accelerator mesh: shard each dispatch's env batch over this many
+    # devices (None = plain single-device jit).  Purely an execution-layout
+    # concern — the sharded fused step is bitwise identical to the
+    # single-device run, so two specs that differ only in devices search
+    # identically (and checkpoints/fingerprints carry no device count).
+    devices: Optional[int] = None
 
     def __post_init__(self) -> None:
         unknown = [w for w in self.workloads if w not in ARCH_IDS]
@@ -112,6 +118,8 @@ class CampaignSpec:
                                       for h in self.hosts)):
             raise ValueError(f"hosts must be a non-empty list of host "
                              f"names (got {self.hosts!r})")
+        if self.devices is not None and self.devices < 1:
+            raise ValueError(f"devices must be >= 1 (got {self.devices})")
 
     @property
     def n_cells(self) -> int:

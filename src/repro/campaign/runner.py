@@ -75,7 +75,8 @@ def run_batch(store: CampaignStore, batch: CellBatch,
         workload, list(batch.node_nms), high_perf=batch.mode == "high_perf",
         search=sc, lanes_per_cell=spec.lanes,
         checkpoint_dir=store.ckpt_dir(batch.batch_id),
-        checkpoint_every=spec.checkpoint_every, resume=True)
+        checkpoint_every=spec.checkpoint_every, resume=True,
+        devices=spec.devices)
 
 
 def _resumed_spec(store: CampaignStore, root: str,
@@ -211,5 +212,6 @@ def run_cells_sequential(spec: CampaignSpec,
                               gate_threshold=spec.gate_threshold)
             out.extend(run_search_cells(
                 wl, [node], high_perf=batch.mode == "high_perf",
-                search=sc, lanes_per_cell=spec.lanes))
+                search=sc, lanes_per_cell=spec.lanes,
+                devices=spec.devices))
     return out

@@ -8,6 +8,7 @@ analytic PPA model, and emit the Table-2 state + Eq.-34 reward.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -156,8 +157,7 @@ class VecStepInfo:
     partition_stats: np.ndarray  # (B, 8)
 
 
-@jax.jit
-def _vec_step_core(cfg, delta_cont, a_disc, wl, node, ranges, weights):
+def _step_core_fn(cfg, delta_cont, a_disc, wl, node, ranges, weights):
     """The fused device step: action application + projection + analytic PPA
     + Eq.-34 reward over the whole batch in one dispatch.  Node constants are
     traced inputs, so one compiled step serves every process node."""
@@ -167,14 +167,12 @@ def _vec_step_core(cfg, delta_cont, a_disc, wl, node, ranges, weights):
     return new_cfg, metrics, r, new_ranges, parts
 
 
-@jax.jit
-def _vec_encode(wl, cfg, metrics, node, part_stats):
+def _encode_fn(wl, cfg, metrics, node, part_stats):
     """Batched Table-2 encoding + SAC 52-dim subset gather, one dispatch."""
     return st.sac_state_vec(st.encode_vec(wl, cfg, metrics, node, part_stats))
 
 
-@jax.jit
-def _vec_step_analytic(cfg, delta_cont, a_disc, wl, node, ranges, weights):
+def _step_analytic_fn(cfg, delta_cont, a_disc, wl, node, ranges, weights):
     """The FULLY fused step (partition_mode="analytic"): action application,
     clamping/projection, analytic partition-stat refresh, analytic PPA and
     Eq.-34 reward + Table-2 encoding — one device dispatch for B env-steps."""
@@ -187,13 +185,48 @@ def _vec_step_analytic(cfg, delta_cont, a_disc, wl, node, ranges, weights):
     return new_cfg, metrics, r, new_ranges, parts, part_stats, obs
 
 
-@jax.jit
-def _vec_reset_eval_analytic(cfg, wl, node):
+def _reset_eval_analytic_fn(cfg, wl, node):
     """Reset-time evaluation + encoding for the analytic-stats mode."""
     metrics = evaluate_vec(cfg, wl, node)
     part_stats = stats_vec(cfg, wl)
     obs = st.sac_state_vec(st.encode_vec(wl, cfg, metrics, node, part_stats))
     return part_stats, obs
+
+
+_vec_step_core = jax.jit(_step_core_fn)
+_vec_encode = jax.jit(_encode_fn)
+_vec_step_analytic = jax.jit(_step_analytic_fn)
+_vec_reset_eval_analytic = jax.jit(_reset_eval_analytic_fn)
+
+
+@functools.lru_cache(maxsize=8)
+def _sharded_step_fns(mesh):
+    """jit(shard_map(...)) versions of the fused step/reset/encode over a
+    1-D batch mesh (``repro.distributed.sharding.batch_mesh``).
+
+    Every fused-step computation is purely element-wise over the batch axis
+    (reward running-ranges are per-element (B, 6) rows — see
+    ``repro.core.reward.reward_step``), so sharding introduces NO
+    collectives and the sharded step is bitwise identical to the unsharded
+    one at equal B (test-enforced).  The workload feature vector is the one
+    replicated operand.  Cached per mesh so every env on the same mesh
+    shares one compiled step.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    pb = P(mesh.axis_names[0])
+    rep = P()
+
+    def sm(fn, in_specs):
+        return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=pb))
+
+    step_analytic = sm(_step_analytic_fn,
+                       (pb, pb, pb, rep, pb, pb, pb))
+    reset_eval = sm(_reset_eval_analytic_fn, (pb, rep, pb))
+    step_core = sm(_step_core_fn, (pb, pb, pb, rep, pb, pb, pb))
+    encode = sm(_encode_fn, (rep, pb, pb, pb, pb))
+    return step_analytic, reset_eval, step_core, encode
 
 
 # partition-cache key fields (must match DSEEnv._repartition's key)
@@ -228,6 +261,16 @@ class VecDSEEnv:
     constants enter the compiled step as traced vectors (``node_vector``),
     so mixed-node batches and sequential per-node sweeps reuse the same
     compiled step (see ``repro.core.search.search_all_nodes``).
+
+    ``devices``: shard the batch axis over the first ``devices`` visible
+    accelerators via ``shard_map`` (mesh built by
+    ``repro.distributed.sharding.batch_mesh``); ``batch`` must divide
+    evenly.  The fused step is purely element-wise over the batch, so the
+    sharded engine is bitwise identical to the default single-device one at
+    equal B — and ``devices=1`` is the degenerate 1-device mesh.  Per-lane
+    RNG streams stay folded from the global seed (``seed + lane``), so
+    shard layout never perturbs reset noise.  ``devices=None`` (default)
+    keeps today's unsharded jit path.
     """
 
     def __init__(self, workload: Workload, node_nm: Union[int, Sequence[int]],
@@ -235,7 +278,8 @@ class VecDSEEnv:
                  partition_period: int = 25, partition_mode: str = "analytic",
                  w_perf: Optional[float] = None,
                  w_power: Optional[float] = None,
-                 w_area: Optional[float] = None):
+                 w_area: Optional[float] = None,
+                 devices: Optional[int] = None):
         if partition_mode not in ("analytic", "exact"):
             raise ValueError(f"unknown partition_mode {partition_mode!r}")
         self.partition_mode = partition_mode
@@ -247,6 +291,23 @@ class VecDSEEnv:
         if batch < 1:
             raise ValueError(f"VecDSEEnv needs batch >= 1, got {batch}")
         self.batch = batch
+        self.devices = devices
+        self.mesh = None
+        if devices is None:
+            self._step_analytic = _vec_step_analytic
+            self._reset_eval_analytic = _vec_reset_eval_analytic
+            self._step_core = _vec_step_core
+            self._encode = _vec_encode
+        else:
+            from repro.distributed.sharding import batch_mesh
+            n = int(devices)
+            if batch % max(n, 1):
+                raise ValueError(
+                    f"VecDSEEnv batch ({batch}) must divide evenly over "
+                    f"devices ({n})")
+            self.mesh = batch_mesh(n)   # raises if n > jax.device_count()
+            (self._step_analytic, self._reset_eval_analytic,
+             self._step_core, self._encode) = _sharded_step_fns(self.mesh)
         self.workload = workload
         self.node_nms = node_nms
         self.high_perf = high_perf
@@ -287,8 +348,8 @@ class VecDSEEnv:
         self.cfg = cs.project(jnp.asarray(cfgs))
         self._t = 0
         if self.partition_mode == "analytic":
-            stats, obs = _vec_reset_eval_analytic(self.cfg, self.wl_vec,
-                                                  self.node_mat)
+            stats, obs = self._reset_eval_analytic(self.cfg, self.wl_vec,
+                                                   self.node_mat)
             self._part_stats = np.asarray(stats)
             return np.asarray(obs)
         cfg_np = np.asarray(self.cfg)
@@ -296,8 +357,8 @@ class VecDSEEnv:
         self._refresh_partitions(cfg_np, np.ones(self.batch, bool))
         self._last_mesh = cfg_np[:, _PART_KEY_IDX[:2]].copy()
         metrics = evaluate_vec_jit(self.cfg, self.wl_vec, self.node_mat)
-        obs = _vec_encode(self.wl_vec, self.cfg, metrics, self.node_mat,
-                          jnp.asarray(self._part_stats))
+        obs = self._encode(self.wl_vec, self.cfg, metrics, self.node_mat,
+                           jnp.asarray(self._part_stats))
         return np.asarray(obs)
 
     def step(self, a_cont: np.ndarray, a_disc: np.ndarray
@@ -307,9 +368,9 @@ class VecDSEEnv:
         a_d = jnp.asarray(a_disc, jnp.int32)
         if self.partition_mode == "analytic":
             (new_cfg, metrics, r, new_ranges, parts, stats,
-             obs) = _vec_step_analytic(self.cfg, delta, a_d, self.wl_vec,
-                                       self.node_mat, self.ranges,
-                                       self.weights)
+             obs) = self._step_analytic(self.cfg, delta, a_d, self.wl_vec,
+                                        self.node_mat, self.ranges,
+                                        self.weights)
             self.cfg = new_cfg
             self.ranges = new_ranges
             self._part_stats = np.asarray(stats)
@@ -321,7 +382,7 @@ class VecDSEEnv:
                 feasible=metrics_np[:, M_IDX["feasible"]] > 0.5,
                 partition_stats=self._part_stats.copy())
             return np.asarray(obs), np.asarray(r), info
-        new_cfg, metrics, r, new_ranges, parts = _vec_step_core(
+        new_cfg, metrics, r, new_ranges, parts = self._step_core(
             self.cfg, delta, a_d, self.wl_vec, self.node_mat,
             self.ranges, self.weights)
         cfg_np = np.asarray(new_cfg)
@@ -333,8 +394,8 @@ class VecDSEEnv:
         self._last_mesh = mesh.copy()
         self.cfg = new_cfg
         self.ranges = new_ranges
-        obs = _vec_encode(self.wl_vec, new_cfg, metrics, self.node_mat,
-                          jnp.asarray(self._part_stats))
+        obs = self._encode(self.wl_vec, new_cfg, metrics, self.node_mat,
+                           jnp.asarray(self._part_stats))
         self._t += 1
         metrics_np = np.asarray(metrics)
         info = VecStepInfo(

@@ -28,6 +28,7 @@ from repro.core.pareto import ArchiveEntry, ParetoArchive
 from repro.core.partition import partition
 from repro.core.replay import PERBuffer
 from repro.core.state import SAC_STATE_DIM
+from repro.kernels import ops as kernel_ops
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.ppa import config_space as cs
@@ -276,7 +277,8 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
                      lanes_per_cell: int = 64,
                      checkpoint_dir: Optional[str] = None,
                      checkpoint_every: int = 0,
-                     resume: bool = False) -> List[SearchResult]:
+                     resume: bool = False,
+                     devices: Optional[int] = None) -> List[SearchResult]:
     """Algorithm 1 on the batched engine over a mixed-node *cell batch*.
 
     Each entry of ``node_nms`` is one search cell; every cell gets
@@ -318,6 +320,14 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
     ``resume=True`` restarts from the latest checkpoint and is exact: a
     killed-and-resumed run reproduces the uninterrupted run bit-for-bit
     (test-enforced).
+
+    ``devices``: shard the B = cells x lanes batch axis of the fused env
+    step over a ``batch_mesh(devices)`` device mesh (``shard_map``; see
+    :class:`VecDSEEnv`).  The step is element-wise over the batch, so a
+    sharded search is bitwise identical to the single-device run at equal
+    B — ``devices`` only buys wall-clock, which is why checkpoints and
+    campaign fingerprints carry no device count and a checkpoint written
+    at one mesh size resumes exactly at another.
     """
     sc = search or SearchConfig()
     n_cells = len(node_nms)
@@ -327,7 +337,14 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
     b = n_cells * lanes
     t0 = time.time()
     env = VecDSEEnv(workload, np.repeat(node_nms, lanes).tolist(),
-                    high_perf=high_perf, seed=sc.seed)
+                    high_perf=high_perf, seed=sc.seed, devices=devices)
+    # Pallas hot-path kernels (TPU backends, or REPRO_PALLAS=1 to force the
+    # interpret path): actor sampling + surrogate K-candidate screening run
+    # through repro.kernels; the default CPU path stays the jnp reference.
+    _policy_act = (kernel_ops.policy_act_batch if kernel_ops.kernels_enabled()
+                   else sac_mod.policy_act_batch)
+    _screen = (kernel_ops.screen_batch if kernel_ops.kernels_enabled()
+               else sur_mod.screen_batch)
     rng = np.random.default_rng(sc.seed)
     key = jax.random.PRNGKey(sc.seed)
 
@@ -521,7 +538,7 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
         key, k_act, k_upd, k_mpc = jax.random.split(key, 4)
         # ---- action selection: per-element eps-greedy (Alg. 1 l.6) -------
         a_c_rand, a_d_rand = act.random_action_batch(rng, b)
-        a_c_pol, a_d_pol = sac_mod.policy_act_batch(
+        a_c_pol, a_d_pol = _policy_act(
             sac_state.params.actor, jnp.asarray(s), k_act)
         a_c_pol, a_d_pol = np.asarray(a_c_pol), np.asarray(a_d_pol)
         if (eps_sched.eps < sc.mpc_eps_gate and surrogate.accepted
@@ -547,7 +564,7 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
             cand_d = np.empty((b, kk, act.N_DISC), np.int32)
             cand_c[:, 0], cand_d[:, 0] = a_c, a_d
             screen_key, k_scr = jax.random.split(screen_key)
-            p_c, p_d = sac_mod.policy_act_batch(
+            p_c, p_d = _policy_act(
                 sac_state.params.actor,
                 jnp.asarray(np.repeat(s, kk - 1, axis=0)), k_scr)
             r_c, r_d = act.random_action_batch(screen_rng, b * (kk - 1))
@@ -556,7 +573,7 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
                                      np.asarray(p_c)).reshape(b, kk - 1, -1)
             cand_d[:, 1:] = np.where(expl[:, None], r_d,
                                      np.asarray(p_d)).reshape(b, kk - 1, -1)
-            pick = np.asarray(sur_mod.screen_batch(
+            pick = np.asarray(_screen(
                 surrogate.params, jnp.asarray(s), jnp.asarray(cand_c),
                 env.weights, jnp.asarray(np.repeat(gate.open, lanes))))
             a_c = cand_c[np.arange(b), pick]
@@ -716,8 +733,8 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
 def run_search(workload: Workload, node_nm: int, *, high_perf: bool = True,
                search: Optional[SearchConfig] = None, n_envs: int = 64,
                checkpoint_dir: Optional[str] = None,
-               checkpoint_every: int = 0, resume: bool = False
-               ) -> SearchResult:
+               checkpoint_every: int = 0, resume: bool = False,
+               devices: Optional[int] = None) -> SearchResult:
     """Algorithm 1 on the batched engine: ``n_envs`` parallel episodes per
     device dispatch (the single-cell view of :func:`run_search_cells`).
 
@@ -732,7 +749,8 @@ def run_search(workload: Workload, node_nm: int, *, high_perf: bool = True,
     return run_search_cells(
         workload, [node_nm], high_perf=high_perf, search=search,
         lanes_per_cell=n_envs, checkpoint_dir=checkpoint_dir,
-        checkpoint_every=checkpoint_every, resume=resume)[0]
+        checkpoint_every=checkpoint_every, resume=resume,
+        devices=devices)[0]
 
 
 def search_all_nodes(workload: Workload, nodes: Sequence[int], *,

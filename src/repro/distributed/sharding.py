@@ -18,6 +18,7 @@ from __future__ import annotations
 from typing import Any, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -187,3 +188,44 @@ def batch_sharding(mesh: Mesh, dp: Axis, *, extra_dims: int = 1):
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+# ------------------------------------------------------- batch-axis meshes
+BATCH_AXIS = "batch"
+
+
+def batch_mesh(devices: Optional[int] = None, *,
+               axis: str = BATCH_AXIS) -> Mesh:
+    """1-D device mesh over the DSE engine's environment-batch axis.
+
+    ``devices=None`` takes every visible device; ``devices=n`` takes the
+    first ``n``.  A mesh of 1 is the degenerate case (``shard_map`` over it
+    is the identity partitioning), so callers can treat single- and multi-
+    device runs uniformly.  Raises ``ValueError`` when more devices are
+    requested than ``jax.device_count()`` provides — CLI layers should
+    surface that before any compile (see ``repro.launch.dse``).
+    """
+    avail = jax.device_count()
+    n = avail if devices is None else int(devices)
+    if n < 1:
+        raise ValueError(f"batch_mesh needs >= 1 device (got {n})")
+    if n > avail:
+        raise ValueError(f"batch_mesh: {n} devices requested but only "
+                         f"{avail} visible (jax.device_count()); emulate "
+                         "host devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
+    return Mesh(np.asarray(jax.devices()[:n]), (axis,))
+
+
+def shard_keys(key: jax.Array, n_shards: int) -> jax.Array:
+    """(n_shards, 2) per-shard PRNG keys folded from one global key.
+
+    ``fold_in(key, shard_index)`` gives every shard an independent stream
+    that is a pure function of the global seed and the shard's position —
+    the same recipe the vec engine uses host-side (``seed + lane_index``),
+    so re-sharding the same global seed re-derives identical streams.
+    """
+    if n_shards < 1:
+        raise ValueError(f"shard_keys needs >= 1 shard (got {n_shards})")
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(n_shards))

@@ -62,3 +62,41 @@ def fused_mlp_reference(x: jnp.ndarray, w1, b1, w2, b2, w3, b3) -> jnp.ndarray:
     h = jax.nn.gelu(x.astype(jnp.float32) @ w1.astype(jnp.float32) + b1)
     h = jax.nn.gelu(h @ w2.astype(jnp.float32) + b2)
     return (h @ w3.astype(jnp.float32) + b3).astype(x.dtype)
+
+
+def screen_scores_reference(params, s: jnp.ndarray, cand: jnp.ndarray,
+                            weights: jnp.ndarray) -> jnp.ndarray:
+    """The score half of ``repro.ppa.surrogate.screen_batch``: scalarized
+    log1p PPA proxy per candidate (lower = better), before the argmin/gate
+    select.  s: [B,S]; cand: [B,K,C]; weights: [B,3] -> [B,K]."""
+    from repro.ppa.surrogate import predict
+    bsz, k = cand.shape[0], cand.shape[1]
+    x = jnp.concatenate(
+        [jnp.broadcast_to(s[:, None, :], (bsz, k, s.shape[-1])), cand],
+        axis=-1)
+    pred = predict(params, x)
+    return (weights[:, None, 1] * pred[..., 0]
+            + weights[:, None, 2] * pred[..., 2]
+            - weights[:, None, 0] * pred[..., 1])
+
+
+def actor_forward_reference(params, s: jnp.ndarray):
+    """The live MoE actor forward (``repro.core.networks.actor_forward``)."""
+    from repro.core.networks import actor_forward
+    return actor_forward(params, s)
+
+
+def sumtree_set_many_reference(tree, idx, values):
+    """Host float64 SumTree oracle: replays ``set_many`` on a live
+    ``repro.core.replay.SumTree`` seeded from ``tree`` and returns the
+    updated [2 * capacity] array."""
+    import numpy as np
+
+    from repro.core.replay import SumTree
+    tree = np.asarray(tree, np.float64)
+    st = SumTree(tree.shape[0] // 2)
+    st.tree[:] = tree
+    st.set_many(np.asarray(idx, np.int64),
+                np.broadcast_to(np.asarray(values, np.float64),
+                                np.asarray(idx).shape))
+    return st.tree.copy()

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: surrogate K-candidate screening scores (Eq. 67 path).
+
+Once a cell's surrogate gate opens, every env-step proposes K candidate
+actions and ``repro.ppa.surrogate.screen_batch`` scores all of them with the
+(128, 64) surrogate MLP — B x K forward passes per dispatch, the hottest
+surrogate call in the campaign engine.  This kernel keeps the whole
+surrogate stack (< 50 KB) resident in VMEM and tiles only the env batch, so
+one grid pass scores every candidate with zero intermediate HBM traffic.
+
+The kernel emits the scalarized log1p PPA proxy scores (B, K) — lower =
+better, mirroring ``ppa_score``; the argmin/gate select stays in jnp (it is
+O(B*K) scalar work).  Tiling: grid = (B / block_b,); weights use whole-array
+BlockSpecs (the ``policy_mlp`` idiom).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import tpu_compiler_params
+
+DEFAULT_BLOCK_B = 256
+
+
+def _dot(a, b):
+    return jax.lax.dot_general(a.astype(jnp.float32), b.astype(jnp.float32),
+                               (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _screen_kernel(s_ref, cand_ref, w_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+                   w3_ref, b3_ref, score_ref):
+    s = s_ref[...].astype(jnp.float32)                     # (bb, S)
+    cand = cand_ref[...].astype(jnp.float32)               # (bb, K, C)
+    bb, k, c = cand.shape
+    x = jnp.concatenate(
+        [jnp.broadcast_to(s[:, None, :], (bb, k, s.shape[-1])), cand],
+        axis=-1).reshape(bb * k, s.shape[-1] + c)
+    h = jax.nn.gelu(_dot(x, w1_ref[...]) + b1_ref[...])
+    h = jax.nn.gelu(_dot(h, w2_ref[...]) + b2_ref[...])
+    pred = (_dot(h, w3_ref[...]) + b3_ref[...]).reshape(bb, k, -1)
+    w = w_ref[...].astype(jnp.float32)                     # (bb, 3)
+    score = (w[:, None, 1] * pred[..., 0] + w[:, None, 2] * pred[..., 2]
+             - w[:, None, 0] * pred[..., 1])
+    score_ref[...] = score.astype(score_ref.dtype)
+
+
+def screen_scores_pallas(s: jnp.ndarray, cand: jnp.ndarray,
+                         weights: jnp.ndarray, w1, b1, w2, b2, w3, b3, *,
+                         block_b: int = DEFAULT_BLOCK_B,
+                         interpret: bool = True) -> jnp.ndarray:
+    """s: [B, S]; cand: [B, K, C]; weights: [B, 3] (w_perf, w_power,
+    w_area); wi/bi: surrogate MLP stack over [S+C] inputs.  Returns [B, K]
+    scalarized screening scores.  Pads B to the batch tile."""
+    B, K, C = cand.shape
+    block_b = min(block_b, max(8, B))
+    pad = (-B) % block_b
+    if pad:
+        s = jnp.pad(s, ((0, pad), (0, 0)))
+        cand = jnp.pad(cand, ((0, pad), (0, 0), (0, 0)))
+        weights = jnp.pad(weights, ((0, pad), (0, 0)))
+    Bp = s.shape[0]
+
+    whole = lambda arr: pl.BlockSpec(arr.shape, lambda i: (0,) * arr.ndim)
+    return pl.pallas_call(
+        _screen_kernel,
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, s.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, K, C), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, weights.shape[1]), lambda i: (i, 0)),
+            whole(w1), whole(b1), whole(w2), whole(b2), whole(w3), whole(b3),
+        ],
+        out_specs=pl.BlockSpec((block_b, K), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, K), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(s, cand, weights, w1, b1, w2, b2, w3, b3)[:B]

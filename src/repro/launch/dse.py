@@ -59,7 +59,8 @@ def run(arch: str, *, nodes: List[int], mode: str, episodes: int,
         batch: int = 3, update_every: int = 1, verbose: bool = False,
         engine: str = "scalar", n_envs: int = 64,
         surrogate_gate: bool = True, screen_k: Optional[int] = None,
-        gate_threshold: Optional[float] = None) -> List[Dict]:
+        gate_threshold: Optional[float] = None,
+        devices: Optional[int] = None) -> List[Dict]:
     cfg = get_config(arch)
     high_perf = mode == "high-performance"
     wl = extract(cfg, seq_len=seq_len, batch=batch)
@@ -78,7 +79,7 @@ def run(arch: str, *, nodes: List[int], mode: str, episodes: int,
                               **gate_kw)
             if engine == "vec":
                 res = run_search(wl, node, high_perf=high_perf, search=sc,
-                                 n_envs=n_envs)
+                                 n_envs=n_envs, devices=devices)
             else:
                 res = run_sac(wl, node, high_perf=high_perf, search=sc)
         elif method == "random":
@@ -115,6 +116,38 @@ def _parse_hosts(s: Optional[str]) -> Optional[List[str]]:
     return [h.strip() for h in s.split(",") if h.strip()]
 
 
+def _resolve_devices(ap: argparse.ArgumentParser,
+                     a: argparse.Namespace) -> Optional[int]:
+    """--mesh/--devices -> mesh device count (None = plain jit).
+
+    Validated against the *visible* JAX device set here, before anything
+    traces or compiles: a count larger than ``jax.device_count()`` dies
+    with a one-line ``ap.error`` instead of a shard_map traceback deep in
+    the engine.  ``--mesh auto`` takes every visible device.
+    """
+    if a.mesh is not None and a.devices is not None:
+        ap.error("--mesh and --devices are aliases; pass exactly one")
+    spec = a.mesh if a.mesh is not None else a.devices
+    if spec is None:
+        return None
+    import jax  # lazy: only mesh runs pay backend init at arg-parse time
+    avail = jax.device_count()
+    if spec == "auto":
+        return avail
+    try:
+        n = int(spec)
+    except ValueError:
+        ap.error(f"--mesh must be 'auto' or a device count (got {spec!r})")
+    if n < 1:
+        ap.error(f"--devices must be >= 1 (got {n})")
+    if n > avail:
+        ap.error(
+            f"--devices {n}: only {avail} JAX device(s) visible; emulate "
+            "host devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    return n
+
+
 def validate_args(ap: argparse.ArgumentParser,
                   a: argparse.Namespace) -> None:
     """Reject invalid flag combinations up front with a one-line error
@@ -146,6 +179,16 @@ def validate_args(ap: argparse.ArgumentParser,
         ap.error(f"{'/'.join(gate_flags)} applies to --engine vec or "
                  "--campaign runs; the scalar engine has no surrogate "
                  "screening gate")
+    mesh_flags = [n for n, v in (("--devices", a.devices),
+                                 ("--mesh", a.mesh)) if v is not None]
+    if mesh_flags and a.resume:
+        ap.error(f"{'/'.join(mesh_flags)}: a resumed campaign keeps the "
+                 "mesh recorded in its manifest; start a new campaign to "
+                 "change it")
+    if mesh_flags and not a.campaign and a.engine != "vec":
+        ap.error(f"{'/'.join(mesh_flags)} shard the batched engine's env "
+                 "batch over accelerators; pass --engine vec or --campaign "
+                 "with them")
     if a.workers is not None and a.workers < 1:
         ap.error(f"--workers must be >= 1 (got {a.workers})")
     if a.workers is not None and not (a.campaign or a.resume):
@@ -203,6 +246,15 @@ def main(argv: Optional[List[str]] = None) -> None:
                          "parallel episodes per jit dispatch")
     ap.add_argument("--n-envs", type=int, default=64,
                     help="environments per dispatch for --engine vec")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the env batch over this many accelerator "
+                         "devices (vec engine / campaigns); must divide the "
+                         "batch and be <= jax.device_count().  Sharded runs "
+                         "are bitwise identical to single-device runs")
+    ap.add_argument("--mesh", default=None, metavar="N|auto",
+                    help="alias for --devices; 'auto' takes every visible "
+                         "device.  Emulate devices on CPU with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     ap.add_argument("--screen-k", type=int, default=None,
                     help="candidate actions proposed per env-step once the "
                          "surrogate gate opens; only the surrogate's top-1 "
@@ -252,6 +304,10 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--verbose", action="store_true")
     a = ap.parse_args(argv)
     validate_args(ap, a)
+    devices = _resolve_devices(ap, a)
+    if devices is not None and not a.campaign and a.n_envs % devices:
+        ap.error(f"--n-envs {a.n_envs} must divide evenly over "
+                 f"--devices {devices}")
     if a.campaign or a.resume:
         import dataclasses
         from repro.campaign import CampaignSpec, run_campaign
@@ -287,6 +343,8 @@ def main(argv: Optional[List[str]] = None) -> None:
                 overrides["gate_threshold"] = a.gate_threshold
             if a.no_surrogate_gate:
                 overrides["surrogate_gate"] = False
+            if devices is not None:
+                overrides["devices"] = devices
             if overrides:
                 spec = dataclasses.replace(spec, **overrides)
             root = os.path.join(a.campaign_root, spec.name)
@@ -310,7 +368,8 @@ def main(argv: Optional[List[str]] = None) -> None:
         batch=a.batch, update_every=a.update_every, verbose=a.verbose,
         engine=a.engine, n_envs=a.n_envs,
         surrogate_gate=not a.no_surrogate_gate,
-        screen_k=a.screen_k, gate_threshold=a.gate_threshold)
+        screen_k=a.screen_k, gate_threshold=a.gate_threshold,
+        devices=devices)
 
 
 if __name__ == "__main__":

@@ -312,6 +312,45 @@ def test_cli_rejects_bad_gate_flags(capsys):
     assert "start a new campaign" in capsys.readouterr().err
 
 
+def test_cli_rejects_bad_mesh_flags(capsys):
+    import jax
+
+    # the regression: an oversubscribed mesh must die in a one-line
+    # ap.error BEFORE anything traces/compiles, not a shard_map traceback
+    over = str(jax.device_count() + 1)
+    with pytest.raises(SystemExit):
+        dse.main(["--engine", "vec", "--devices", over])
+    err = capsys.readouterr().err
+    assert "device(s) visible" in err
+    assert "xla_force_host_platform_device_count" in err
+    with pytest.raises(SystemExit):
+        dse.main(["--engine", "vec", "--mesh", over])
+    assert "device(s) visible" in capsys.readouterr().err
+    with pytest.raises(SystemExit):
+        dse.main(["--engine", "vec", "--devices", "0"])
+    assert "--devices must be >= 1" in capsys.readouterr().err
+    with pytest.raises(SystemExit):
+        dse.main(["--engine", "vec", "--mesh", "banana"])
+    assert "'auto' or a device count" in capsys.readouterr().err
+    with pytest.raises(SystemExit):
+        dse.main(["--devices", "1"])       # scalar engine has no batch
+    assert "--engine vec" in capsys.readouterr().err
+    with pytest.raises(SystemExit):
+        dse.main(["--engine", "vec", "--devices", "1", "--mesh", "1"])
+    assert "exactly one" in capsys.readouterr().err
+    if jax.device_count() >= 2:
+        # batch divisibility gate (devices=1 divides everything, so this
+        # case needs a real >= 2-device mesh: CI's multidev step)
+        with pytest.raises(SystemExit):
+            dse.main(["--engine", "vec", "--devices", "2",
+                      "--n-envs", "7"])
+        assert "divide evenly" in capsys.readouterr().err
+    # a resumed campaign keeps the manifest's mesh
+    with pytest.raises(SystemExit):
+        dse.main(["--resume", "/does/not/exist", "--devices", "1"])
+    assert "manifest" in capsys.readouterr().err
+
+
 def test_cli_campaign_end_to_end(tmp_path):
     grid = tmp_path / "grid.json"
     grid.write_text(json.dumps(dict(
