@@ -1,0 +1,122 @@
+"""Benchmark: warm-started search vs cold search (cross-campaign transfer).
+
+Measures the headline transfer claim — a warm-started cell reaches the
+cold run's best PPA in a fraction of the episodes:
+
+  * **cold** — ``run_search_cells`` from scratch; its convergence trace
+    gives the final best score and the episode at which it was reached.
+  * **donor** — the same cell run as a persistent campaign
+    (``run_campaign``), leaving archives + per-batch weights behind.
+  * **warm** — a fresh search seeded by ``repro.campaign.transfer``:
+    donor weights + the donor frontier re-evaluated for the target cell.
+
+The reported ``episodes_ratio`` is (episodes the warm run needs to match
+the cold run's final best) / (episodes the cold run needed) — the CI
+floor (``benchmarks.check_floors``) requires <= 0.7x.  Writes
+``experiments/tables/bench_transfer.json``.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_transfer
+Knobs: REPRO_BENCH_TRANSFER_EPISODES (default 1024), .._LANES (default 8),
+       .._NODE (default 5), .._ARCH (default llama3.1-8b).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+
+EPISODES = int(os.environ.get("REPRO_BENCH_TRANSFER_EPISODES", "1024"))
+LANES = int(os.environ.get("REPRO_BENCH_TRANSFER_LANES", "8"))
+NODE = int(os.environ.get("REPRO_BENCH_TRANSFER_NODE", "5"))
+ARCH = os.environ.get("REPRO_BENCH_TRANSFER_ARCH", "llama3.1-8b")
+
+
+def episodes_to_reach(trace, target_score: float) -> int:
+    """First traced episode whose incumbent best is at or below
+    ``target_score`` (scores improve downward); the full budget if the
+    trace never gets there."""
+    for tp in trace:
+        if tp.best_score <= target_score + 1e-9:
+            return max(1, tp.episode)
+    return max(1, trace[-1].episode if trace else EPISODES)
+
+
+def bench_rows():
+    from repro.campaign import CampaignSpec, CampaignStore
+    from repro.campaign import transfer as transfer_mod
+    from repro.campaign.planner import plan_cached
+    from repro.campaign.runner import run_campaign
+    from repro.configs import get_config
+    from repro.core.search import SearchConfig, run_search_cells
+    from repro.workload.extract import extract
+
+    spec = CampaignSpec(
+        name="donor", workloads=[ARCH], nodes=[NODE], modes=["high_perf"],
+        episodes=EPISODES, lanes=LANES, max_envs=LANES, seed=0,
+        seq_len=2048, batch=3, checkpoint_every=0)
+    wl = extract(get_config(ARCH), seq_len=spec.seq_len, batch=spec.batch)
+    sc = SearchConfig(episodes=EPISODES, seed=spec.seed,
+                      surrogate_gate=spec.surrogate_gate,
+                      screen_k=spec.screen_k,
+                      gate_threshold=spec.gate_threshold)
+    tmp = tempfile.mkdtemp(prefix="bench_transfer_")
+    try:
+        # cold baseline (also the jit warmup for the shapes both runs use)
+        cold = run_search_cells(wl, [NODE], high_perf=True, search=sc,
+                                lanes_per_cell=LANES)[0]
+        cold_best = cold.trace[-1].best_score
+        e_cold = episodes_to_reach(cold.trace, cold_best)
+
+        donor_root = os.path.join(tmp, "donor")
+        run_campaign(donor_root, spec, progress=lambda _m: None)
+
+        tspec = dataclasses.replace(spec, name="target",
+                                    transfer_from=[donor_root])
+        store = CampaignStore.create(os.path.join(tmp, "target"), tspec)
+        transfer_mod.prepare_store(store)
+        batch = plan_cached(tspec)[0]
+        warm_seed = transfer_mod.load_warm_start(store, batch, wl)
+        assert warm_seed is not None, "no usable donor artifacts"
+        warm = run_search_cells(wl, [NODE], high_perf=True, search=sc,
+                                lanes_per_cell=LANES,
+                                warm_start=warm_seed)[0]
+        e_warm = episodes_to_reach(warm.trace, cold_best)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    ratio = e_warm / e_cold
+    out_dir = os.environ.get("REPRO_BENCH_OUT", "experiments/tables")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "bench_transfer.json"), "w") as f:
+        json.dump({"arch": ARCH, "node_nm": NODE, "episodes": EPISODES,
+                   "lanes": LANES, "cold_best_score": cold_best,
+                   "episodes_to_best_cold": e_cold,
+                   "episodes_to_cold_best_warm": e_warm,
+                   "episodes_ratio": ratio,
+                   "had_weights": bool(warm_seed.get("flat")),
+                   "seeded_entries": sum(
+                       len(c["entries"]) for c in warm_seed["cells"] if c)},
+                  f, indent=1)
+    return [
+        ("transfer_cold", float(e_cold), f"best {cold_best:.4f}"),
+        ("transfer_warm", float(e_warm), f"reached cold best"),
+        ("transfer_ratio", ratio, f"{ratio:.2f}x"),
+    ]
+
+
+def main() -> None:
+    print(f"# transfer benchmark ({ARCH} @ {NODE}nm, {EPISODES} ep, "
+          f"lanes={LANES})")
+    print("name,value,derived")
+    rows = bench_rows()
+    for name, v, derived in rows:
+        print(f"{name},{v:.2f},{derived}")
+    ratio = rows[-1][1]
+    print(f"# episodes ratio {ratio:.2f}x "
+          f"({'PASS' if ratio <= 0.7 else 'FAIL'}: ceiling 0.7x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,9 @@ enforces the committed floors:
     (fused env step sharded over 4 emulated host devices vs plain
     single-device jit, when cores >= devices; gated only against
     pathological slowdown below that — see benchmarks.bench_multidev)
+  * ``bench_transfer.json``       episodes_ratio     <= 0.7x
+    (warm-started cell reaches the cold run's best PPA in at most 0.7x
+    the episodes; see benchmarks.bench_transfer)
 
 Exit 0 iff every present table passes and none is missing.  CI runs this
 after the benchmark smoke job so the perf trajectory is regression-gated
@@ -70,6 +73,7 @@ FLOORS = {
                          ("one_dispatch", True, "bool")],
     "bench_obs.json": [("overhead_pct", 5.0, "max")],
     "bench_multidev.json": [("speedup", _multidev_floor, "min")],
+    "bench_transfer.json": [("episodes_ratio", 0.7, "max")],
 }
 
 

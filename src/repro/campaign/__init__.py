@@ -19,6 +19,10 @@ campaigns over the grid (workload in the config zoo) x (process node) x
   sharding, shared-nothing worker loops under ``worker-<i>/``, and the
   crash-safe manifest reconciler that merges worker run directories into
   the top-level frontier.
+* :mod:`repro.campaign.transfer` — cross-campaign transfer: warm-start
+  new campaigns from completed run directories (``--transfer-from``), fit
+  the persistent cost model (``repro.models.cost_model``) whose predicted
+  episodes-to-feasible drives priority-aware batch packing.
 
 CLI: ``python -m repro.launch.dse --campaign grid.yaml [--workers W]`` /
 ``--resume <run-dir>`` (see ROADMAP.md for the run-directory layout).
@@ -26,11 +30,17 @@ CLI: ``python -m repro.launch.dse --campaign grid.yaml [--workers W]`` /
 from repro.campaign.planner import Cell, CellBatch, CampaignSpec, plan
 from repro.campaign.runner import run_campaign
 from repro.campaign.store import CampaignStore, merge_runs
-from repro.campaign.report import write_index_report, write_reports
+from repro.campaign.report import (write_index_report, write_reports,
+                                   write_scaling_report)
 from repro.campaign.distrib import (fingerprint, reconcile, run_worker,
                                     shard_batches)
+# last: transfer imports the planner/store modules above (already in
+# sys.modules by now, so no cycle) and lazily pulls in the serving layer
+from repro.campaign.transfer import (load_warm_start, prepare_store,
+                                     with_transfer)
 
 __all__ = ["Cell", "CellBatch", "CampaignSpec", "plan", "run_campaign",
            "CampaignStore", "merge_runs", "write_reports",
-           "write_index_report", "fingerprint", "reconcile", "run_worker",
-           "shard_batches"]
+           "write_index_report", "write_scaling_report", "fingerprint",
+           "reconcile", "run_worker", "shard_batches", "load_warm_start",
+           "prepare_store", "with_transfer"]

@@ -73,17 +73,41 @@ VOLATILE_KEYS = ("completed", "wall_s", "batch", "worker")
 
 
 # --------------------------------------------------------------- sharding
-def shard_batches(batches: List[CellBatch], workers: int
+def shard_batches(batches: List[CellBatch], workers: int,
+                  priorities: Optional[Dict[str, float]] = None
                   ) -> Dict[int, List[CellBatch]]:
     """Deal batches to workers: sort by batch_id, then round-robin.
 
     Deterministic and order-independent (the sort makes the deal a pure
     function of the batch SET), and balanced to within one batch per
     worker.  Workers that receive no batches are absent from the result.
+
+    With ``priorities`` (a fitted cost model's predicted episodes per
+    ``CellBatch.key``; see ``repro.campaign.transfer``), the deal becomes
+    longest-processing-time-first: batches are taken in descending
+    predicted cost (stably tied on batch_id) and each goes to the worker
+    with the smallest accumulated predicted load (ties to the lowest
+    slot), so workers drain together instead of one slot drawing all the
+    expensive batches.  Still a pure function of (batch set, priorities)
+    — batch seeds derive from the global index either way, so the dealt
+    fleet fingerprints identically to W=1 regardless of the deal shape.
     """
     if workers < 1:
         raise ValueError(f"workers must be >= 1 (got {workers})")
     out: Dict[int, List[CellBatch]] = {}
+    if priorities:
+        load = [0.0] * workers
+        for b in sorted(batches,
+                        key=lambda b: (-float(priorities.get(b.key, 0.0)),
+                                       b.batch_id)):
+            # batch count breaks load ties: with equal (or degenerate
+            # all-zero) predicted costs the deal stays balanced to within
+            # one batch instead of piling everything on slot 0
+            w = min(range(workers),
+                    key=lambda i: (load[i], len(out.get(i, ())), i))
+            load[w] += max(0.0, float(priorities.get(b.key, 0.0)))
+            out.setdefault(w, []).append(b)
+        return out
     for i, b in enumerate(sorted(batches, key=lambda b: b.batch_id)):
         out.setdefault(i % workers, []).append(b)
     return out
@@ -125,7 +149,14 @@ def create_fleet(root: str, spec: CampaignSpec, workers: int, *,
     only the shared run directory) know their heartbeat cadence and the
     supervisor knows when a silent worker is dead."""
     store = CampaignStore.create(root, spec)
-    assign = shard_batches(plan_cached(spec), workers)
+    if spec.transfer_from:
+        # record warm-start donors + persist the cost model BEFORE any
+        # worker is spawned: the manifest's transfer block is what makes
+        # every worker derive the identical warm start
+        from repro.campaign import transfer as transfer_mod
+        transfer_mod.prepare_store(store)
+    assign = shard_batches(plan_cached(spec), workers,
+                           priorities=spec.priorities)
     store.manifest["fleet"] = dict(
         workers=workers, started_ts=time.time(),
         lease_ttl_s=float(lease_ttl_s), events=[],
@@ -161,13 +192,19 @@ def plan_resume(root: str, workers: Optional[int] = None, *,
     upgraded to a fleet.
     """
     store = CampaignStore.open(root)
+    if store.spec.transfer_from:
+        # crash-safe: a kill between CampaignStore.create and
+        # prepare_store leaves a transfer campaign without its recorded
+        # donors; prepare_store is idempotent (no-op once recorded)
+        from repro.campaign import transfer as transfer_mod
+        transfer_mod.prepare_store(store)
     reconcile(store)
     # snapshot the fleet block only AFTER reconcile: it just updated
     # wall_s / worker_stats in place, and a stale copy would clobber them
     fleet = dict(store.manifest.get("fleet") or {})
     workers = int(workers or fleet.get("workers") or 1)
     todo = pending_batches(store)
-    assign = shard_batches(todo, workers)
+    assign = shard_batches(todo, workers, priorities=store.spec.priorities)
     assignments = {b.batch_id: w for w, bs in assign.items() for b in bs}
     _relocate_ckpts(root, assignments)
     _clear_stale_ckpts(root, set(assignments))
@@ -304,6 +341,11 @@ def _open_worker_store(root: str, idx: int, top: CampaignStore,
             seed=top.manifest["seed"],
             episodes_per_cell=top.manifest["episodes_per_cell"],
             spec=top.manifest["spec"], cells={}))
+    if "transfer" in top.manifest:
+        # warm-start donors are resolved against the store execute_batch
+        # runs under — mirror the top-level record verbatim so a worker
+        # derives the exact same warm start a W=1 run would
+        w.manifest["transfer"] = top.manifest["transfer"]
     for cid in sorted(c.cell_id for b in batches for c in b.cells):
         rec = top.manifest["cells"].get(cid, {})
         mine = w.manifest["cells"].get(cid, {})

@@ -46,9 +46,16 @@ class CellBatch:
     node_nms: tuple
 
     @property
-    def batch_id(self) -> str:
+    def key(self) -> str:
+        """Index-free content key (arch, mode, nodes): what transfer
+        priorities and warm-start donor records are keyed on — stable
+        across re-packs, unlike ``batch_id`` which embeds the index."""
         nodes = "-".join(str(n) for n in self.node_nms)
-        return f"b{self.index:03d}__{self.arch}__{self.mode}__{nodes}nm"
+        return f"{self.arch}__{self.mode}__{nodes}nm"
+
+    @property
+    def batch_id(self) -> str:
+        return f"b{self.index:03d}__{self.key}"
 
     @property
     def cells(self) -> List[Cell]:
@@ -91,6 +98,17 @@ class CampaignSpec:
     # single-device run, so two specs that differ only in devices search
     # identically (and checkpoints/fingerprints carry no device count).
     devices: Optional[int] = None
+    # cross-campaign transfer (see repro.campaign.transfer): donor run
+    # directories whose archives warm-start this campaign's batches and
+    # train its persistent cost model.  Recorded in the spec (hence the
+    # manifest) so fleet deal and --resume derive the identical plan.
+    transfer_from: Optional[List[str]] = None
+    # predicted per-batch cost (CellBatch.key -> predicted episodes),
+    # normally filled by transfer.with_transfer from the fitted cost
+    # model.  plan() orders batch EXECUTION by descending cost so
+    # workers drain together; index assignment (and with it per-batch
+    # seeds) stays spec-order-derived.
+    priorities: Optional[Dict[str, float]] = None
 
     def __post_init__(self) -> None:
         unknown = [w for w in self.workloads if w not in ARCH_IDS]
@@ -120,6 +138,20 @@ class CampaignSpec:
                              f"names (got {self.hosts!r})")
         if self.devices is not None and self.devices < 1:
             raise ValueError(f"devices must be >= 1 (got {self.devices})")
+        if self.transfer_from is not None and (
+                not isinstance(self.transfer_from, list)
+                or not self.transfer_from
+                or any(not isinstance(r, str) or not r.strip()
+                       for r in self.transfer_from)):
+            raise ValueError(f"transfer_from must be a non-empty list of "
+                             f"run directories (got {self.transfer_from!r})")
+        if self.priorities is not None and (
+                not isinstance(self.priorities, dict)
+                or any(not isinstance(v, (int, float))
+                       or isinstance(v, bool)
+                       for v in self.priorities.values())):
+            raise ValueError(f"priorities must map batch keys to numbers "
+                             f"(got {self.priorities!r})")
 
     @property
     def n_cells(self) -> int:
@@ -185,6 +217,15 @@ def plan(spec: CampaignSpec) -> List[CellBatch]:
     Grouping key is (workload, mode) — those fix the env's workload vector
     and reward weights — and the node list is chunked so that
     ``len(chunk) * lanes <= max_envs``.
+
+    With ``spec.priorities`` set (a fitted cost model's predicted episodes
+    per ``CellBatch.key``), the returned list is ordered by DESCENDING
+    predicted cost (longest-work-first, stably tied on batch_id) so
+    sequential runs finish the expensive batches first and fleet workers
+    drain together.  Only the execution order changes: ``index`` is
+    assigned in spec order regardless, so per-batch seeds
+    (``spec.seed + 1000 * index``) — and with them every fingerprint —
+    are identical to the unprioritised plan.
     """
     per_batch = max(1, spec.max_envs // spec.lanes)
     out: List[CellBatch] = []
@@ -194,6 +235,10 @@ def plan(spec: CampaignSpec) -> List[CellBatch]:
             for i in range(0, len(nodes), per_batch):
                 out.append(CellBatch(index=len(out), arch=w, mode=m,
                                      node_nms=tuple(nodes[i:i + per_batch])))
+    if spec.priorities:
+        pr = spec.priorities
+        out = sorted(out, key=lambda b: (-float(pr.get(b.key, 0.0)),
+                                         b.batch_id))
     return out
 
 

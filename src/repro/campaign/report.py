@@ -13,6 +13,11 @@
   reconciler folds into the manifest's ``fleet`` block, plus the
   supervision event log (evictions, mid-run re-deals, stale-leg
   closures) so a healed run is auditable from the report alone.
+* ``scaling``    — scaling-law fits from the merged archives: for every
+  (workload, mode) with >= 2 completed nodes, a log-log linear fit of
+  the selected design's PPA vs process node (slope = the empirical
+  scaling exponent), with residuals and the per-cell frontier data the
+  fit was read from.
 
 ``write_index_report`` renders the serving-side view: one row per cell of
 the merged archive index (``repro.launch.recommend``) with frontier size
@@ -135,6 +140,84 @@ def worker_rows(store) -> List[Dict]:
     return rows
 
 
+SCALING_METRICS = ("power_mw", "perf_gops", "area_mm2", "tok_s")
+SCALING_COLS = ("metric", "slope", "intercept", "mean_sq_residual")
+
+
+def scaling_fits(store) -> Dict:
+    """Per-(workload, mode) PPA-vs-node scaling fits from merged archives.
+
+    For every cell with a non-empty archive, the mode-default scalarized
+    ``select()`` winner (the design the serving layer would answer with)
+    contributes one point; groups with >= 2 distinct nodes get, per
+    metric, a least-squares line in log-log space —
+    ``log(metric) = slope * log(node_nm) + intercept`` — whose slope is
+    the empirical scaling exponent the paper's cross-node tables read
+    qualitatively.  Returns ``{"fits": {...}, "cells": {...}}`` where
+    ``cells`` carries each cell's full frontier arrays (the fit's raw
+    data, JSON-safe)."""
+    import numpy as np
+
+    from repro.launch.recommend import MODE_WEIGHTS, split_cell_id
+    groups: Dict = {}
+    cells: Dict[str, Dict] = {}
+    for cid in sorted(store.manifest["cells"]):
+        ar = store.load_archive(cid)
+        if not len(ar):
+            continue
+        arch, node_nm, mode = split_cell_id(cid)
+        cells[cid] = {k: np.asarray(v, np.float64).tolist()
+                      for k, v in ar.frontier().items()}
+        e = ar.select(*MODE_WEIGHTS.get(mode, MODE_WEIGHTS["high_perf"]))
+        if e is not None:
+            groups.setdefault((arch, mode), []).append((node_nm, e))
+    fits: Dict[str, Dict] = {}
+    for (arch, mode), pts in sorted(groups.items()):
+        pts.sort(key=lambda p: p[0])
+        nodes = [p[0] for p in pts]
+        if len(set(nodes)) < 2:
+            continue
+        ln = np.log(np.asarray(nodes, np.float64))
+        metrics = {}
+        for name in SCALING_METRICS:
+            vals = np.asarray([getattr(e, name) for _, e in pts],
+                              np.float64)
+            ly = np.log(np.maximum(vals, 1e-12))
+            slope, intercept = np.polyfit(ln, ly, 1)
+            resid = float(np.mean((slope * ln + intercept - ly) ** 2))
+            metrics[name] = dict(slope=round(float(slope), 6),
+                                 intercept=round(float(intercept), 6),
+                                 mean_sq_residual=round(resid, 8),
+                                 values=vals.tolist())
+        fits[f"{arch}__{mode}"] = dict(nodes=nodes, metrics=metrics)
+    return dict(fits=fits, cells=cells)
+
+
+def write_scaling_report(store, out_dir: Optional[str] = None
+                         ) -> Dict[str, str]:
+    """Emit ``scaling.{json,md}``.  Always writes both (fits may be empty
+    for single-node grids; the per-cell frontier data is still there)."""
+    out_dir = out_dir or os.path.join(store.root, "report")
+    os.makedirs(out_dir, exist_ok=True)
+    data = scaling_fits(store)
+    paths = {"scaling_json": os.path.join(out_dir, "scaling.json"),
+             "scaling_md": os.path.join(out_dir, "scaling.md")}
+    with open(paths["scaling_json"], "w") as f:
+        json.dump(data, f, indent=1, allow_nan=False)
+    with open(paths["scaling_md"], "w") as f:
+        f.write(f"# Campaign `{store.manifest['name']}` — PPA-vs-node "
+                f"scaling ({len(data['fits'])} fit groups, "
+                f"{len(data['cells'])} cells)\n")
+        for key, fit in sorted(data["fits"].items()):
+            f.write(f"\n## {key} (nodes: "
+                    f"{', '.join(str(n) for n in fit['nodes'])}nm)\n\n")
+            rows = [dict(metric=m, **{c: fit["metrics"][m][c]
+                                      for c in SCALING_COLS[1:]})
+                    for m in SCALING_METRICS]
+            f.write(markdown_table(rows, SCALING_COLS))
+    return paths
+
+
 def write_reports(store, out_dir: Optional[str] = None) -> Dict[str, str]:
     """Emit cells + adaptation tables as JSON and markdown; returns paths."""
     out_dir = out_dir or os.path.join(store.root, "report")
@@ -162,6 +245,8 @@ def write_reports(store, out_dir: Optional[str] = None) -> Dict[str, str]:
         for key, rws in sorted(adapt.items()):
             f.write(f"\n## {key}\n\n")
             f.write(markdown_table(rws, ADAPT_COLS))
+
+    paths.update(write_scaling_report(store, out_dir))
 
     workers = worker_rows(store)
     if workers:

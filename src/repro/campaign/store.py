@@ -105,8 +105,14 @@ def lease_expired(lease: Optional[Dict], *, now: Optional[float] = None,
     finished and stopped refreshing on purpose."""
     if lease is None or lease.get("done"):
         return False
+    # explicit None checks: `lease.get("ttl_s") or DEFAULT` would silently
+    # promote an explicit-but-falsy ttl (0 / 0.0, e.g. a sub-second chaos
+    # harness rounding down) to the 15 s default, so the holder looked
+    # alive for 15 s after its last beat instead of expiring immediately
+    lease_ttl = lease.get("ttl_s")
     ttl = float(ttl_s if ttl_s is not None
-                else lease.get("ttl_s") or DEFAULT_LEASE_TTL_S)
+                else lease_ttl if lease_ttl is not None
+                else DEFAULT_LEASE_TTL_S)
     return (now if now is not None else time.time()) \
         - float(lease.get("ts") or 0.0) > ttl
 
@@ -267,6 +273,16 @@ class CampaignStore:
                 if rec.get("kind") == "point"]))
         return ar
 
+    def _point_keys(self, cell_id: str) -> set:
+        """Keys of every point record physically in the cell's JSONL —
+        including dominated/duplicate lines the filtered archive drops —
+        so merge appends can skip anything already on disk."""
+        path = self._cell_path(cell_id)
+        if not os.path.isfile(path):
+            return set()
+        return {_entry_key(ArchiveEntry.from_dict(rec))
+                for rec in _read_jsonl(path) if rec.get("kind") == "point"}
+
     def load_summary(self, cell_id: str) -> Optional[Dict]:
         """Last summary line of the cell (None if never completed)."""
         path = self._cell_path(cell_id)
@@ -299,6 +315,18 @@ class CampaignStore:
     def ckpt_dir(self, batch_id: str) -> str:
         return os.path.join(self.root, "ckpt", batch_id)
 
+    # ------------------------------------------------------ persistent model
+    def model_dir(self) -> str:
+        """``<root>/model/``: the campaign's persistent learned artifacts —
+        the fitted cost model (``model/cost/``), its held-out eval
+        (``model/eval.json``) and per-batch final weights
+        (``model/weights/<batch_id>/``) that future campaigns warm-start
+        from (see ``repro.campaign.transfer``)."""
+        return os.path.join(self.root, "model")
+
+    def weights_dir(self, batch_id: str) -> str:
+        return os.path.join(self.model_dir(), "weights", batch_id)
+
     def clear_ckpt(self, batch_id: str) -> None:
         shutil.rmtree(self.ckpt_dir(batch_id), ignore_errors=True)
 
@@ -327,9 +355,18 @@ def merge_runs(dst: CampaignStore, src_roots: List[str]
     """Union per-cell archives from other run directories into ``dst``.
 
     For every cell id present in any source, the source frontier points are
-    inserted into dst's archive with dominance filtering and the merged
-    frontier is appended to dst's JSONL (a fresh ``load_archive`` then
-    reconstructs exactly the merged frontier).  Returns the merged archives.
+    inserted into dst's archive with dominance filtering, and the entries of
+    the merged frontier *not already on dst's disk* are appended to dst's
+    JSONL (a fresh ``load_archive`` then reconstructs exactly the merged
+    frontier).  Returns the merged archives.
+
+    Only genuinely novel lines are appended: the dedup key set is built
+    from dst's raw on-disk point records — NOT the dominance-filtered
+    archive, which undercounts what is physically in the file — so
+    repeated merges (the serving re-index path calls ``archive_index()``
+    per rebuild, warm-start lookups per batch) keep ``cells/*.jsonl`` at
+    O(total distinct points) instead of re-appending the whole frontier
+    every time one novel point shows up.
     """
     merged: Dict[str, ParetoArchive] = {}
     cell_ids = set(dst.manifest["cells"])
@@ -343,8 +380,9 @@ def merge_runs(dst: CampaignStore, src_roots: List[str]
             pool.extend(s.load_archive(cid).entries)
         ar = ParetoArchive()
         ar.insert_batch(_dedupe(pool))
-        have = {_entry_key(e) for e in own.entries}
-        if any(_entry_key(e) not in have for e in ar.entries):
-            dst.append_points(cid, ar.entries)
+        on_disk = dst._point_keys(cid)
+        novel = [e for e in ar.entries if _entry_key(e) not in on_disk]
+        if novel:
+            dst.append_points(cid, novel)
         merged[cid] = ar
     return merged

@@ -1,0 +1,340 @@
+"""Cross-campaign transfer: warm-starts, persistent cost model, priorities.
+
+A finished campaign leaves three reusable artifacts in its run directory:
+per-cell Pareto archives (``cells/*.jsonl``), per-batch final SAC /
+surrogate weights (``model/weights/<batch_id>/``, snapshotted by
+``run_search_cells``), and — once this module has seen it — a fitted
+persistent cost model (``model/cost/``).  ``--transfer-from <root>``
+feeds those artifacts forward into a new campaign:
+
+* **warm-start** (:func:`prepare_store` + :func:`load_warm_start`): for
+  every batch of the new grid, the nearest completed donor cell is
+  located by workload-feature/node distance across all donor roots, and
+  recorded in ``manifest["transfer"]``.  When the batch starts, the
+  donor's weights seed the SAC/surrogate state and the donor's frontier
+  — RE-EVALUATED under the target cell's (workload, node, mode) by the
+  analytic model, so foreign metrics never pollute the archive — seeds
+  the Pareto archive and best incumbent.
+* **priority-aware packing** (:func:`with_transfer`): the cost model's
+  episodes-to-feasible head predicts each batch's cost; the predictions
+  land in ``spec.priorities``, which ``planner.plan`` uses to order
+  batch execution and ``distrib.shard_batches`` uses for its
+  longest-processing-time-first fleet deal.
+
+Determinism doctrine: donors and priorities are a pure function of the
+reconciled donor stores and the spec — computed ONCE (``with_transfer``
+before the store exists, ``prepare_store`` at store creation), recorded
+in the spec/manifest, and only ever READ afterwards.  Fleet workers
+mirror the top-level transfer record verbatim, so a W-worker fleet, a
+W=1 run, and any kill/--resume of either derive the identical warm
+start (checkpoint resumes bypass it entirely — the checkpoint already
+holds the warmed state).  Nothing here consults the wall clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import math
+import os
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.campaign.planner import (CampaignSpec, Cell, CellBatch,
+                                    plan_cached)
+from repro.campaign.store import STATUS_DONE, CampaignStore
+from repro.core import fsutil
+
+#: additive donor-distance penalty for a mode mismatch: a cross-mode
+#: donor (different reward weights AND node constants) is only ever
+#: picked when the donor pool holds no same-mode cell at all
+MODE_PENALTY = 100.0
+
+EVAL_NAME = "eval.json"
+
+
+# ------------------------------------------------------------- featurize
+def _wl_log(arch: str, seq_len: int, batch: int) -> np.ndarray:
+    """log1p workload feature vector at given extraction settings."""
+    from repro.configs import get_config
+    from repro.launch.recommend import _log1p
+    from repro.workload.extract import extract
+    return _log1p(extract(get_config(arch), seq_len=seq_len,
+                          batch=batch).features)
+
+
+def cell_context(arch: str, node_nm: int, mode: str,
+                 seq_len: int, batch: int) -> np.ndarray:
+    """(WL_DIM + NODE_DIM,) serving-layer cell context — the cost
+    model's episodes-head input, built exactly like
+    ``ArchiveIndex.query_context`` but at arbitrary extraction
+    settings (the TARGET spec's, not the donor index's)."""
+    from repro.launch.recommend import _log1p
+    from repro.ppa.analytic import node_vector
+    from repro.ppa.nodes import node_params
+    nv = node_vector(node_params(node_nm, low_power=mode != "high_perf"),
+                     high_perf=mode == "high_perf")
+    return np.concatenate([_wl_log(arch, seq_len, batch), _log1p(nv)])
+
+
+def donor_distance(wl_t: np.ndarray, node_t: int, mode_t: str,
+                   wl_d: np.ndarray, node_d: int, mode_d: str) -> float:
+    """Workload-feature/node distance between a target cell and a donor
+    cell: L2 over log1p workload features (scale-free across model
+    sizes) + |log node ratio| (3nm vs 5nm is as far as 5nm vs ~8nm) +
+    a large cross-mode penalty.  Pure and symmetric — the donor table
+    it induces is reproducible from the stores alone."""
+    d = float(np.linalg.norm(wl_t - wl_d))
+    d += abs(math.log(float(node_t) / float(node_d)))
+    if mode_t != mode_d:
+        d += MODE_PENALTY
+    return d
+
+
+# ----------------------------------------------------------- donor lookup
+def _donor_pool(roots: List[str],
+                stores: List[CampaignStore]) -> List[Dict]:
+    """Every completed cell across the donor roots, with its log1p
+    workload features at the DONOR's extraction settings."""
+    from repro.launch.recommend import split_cell_id
+    pool: List[Dict] = []
+    for root, ds in zip(roots, stores):
+        sl, ba = ds.spec.seq_len, ds.spec.batch
+        for cid in sorted(ds.manifest["cells"]):
+            if ds.manifest["cells"][cid].get("status") != STATUS_DONE:
+                continue
+            arch, node_nm, mode = split_cell_id(cid)
+            pool.append(dict(root=root, cell_id=cid, arch=arch,
+                             node_nm=node_nm, mode=mode,
+                             wl=_wl_log(arch, sl, ba)))
+    return pool
+
+
+def _donor_batch_id(donor: CampaignStore, cell_id: str) -> Optional[str]:
+    """The donor batch that ran ``cell_id`` (its weights snapshot key)."""
+    for b in plan_cached(donor.spec):
+        if any(c.cell_id == cell_id for c in b.cells):
+            return b.batch_id
+    return None
+
+
+def find_weights(root: str, batch_id: str) -> Optional[str]:
+    """Locate a donor batch's final-weights snapshot under ``root``.
+
+    Single-process campaigns save under ``<root>/model/weights/<bid>``;
+    fleet workers save under their own store, ``<root>/worker-*/model/
+    weights/<bid>`` (reconcile merges archives, it does not move
+    weights).  Snapshots of one batch advance monotonically and only one
+    worker runs a batch at a time, so — like ``_relocate_ckpts`` — the
+    highest step wins."""
+    from repro.checkpoint import manager as ckpt_mod
+    cands = [os.path.join(root, "model", "weights", batch_id)] + sorted(
+        glob.glob(os.path.join(root, "worker-*", "model", "weights",
+                               batch_id)))
+    steps = {c: s for c in cands
+             if (s := ckpt_mod.latest_step(c)) is not None}
+    if not steps:
+        return None
+    return max(steps, key=lambda c: (steps[c], c))
+
+
+# ---------------------------------------------------------------- prepare
+def prepare_store(store: CampaignStore,
+                  progress: Callable[[str], None] = lambda m: None) -> Dict:
+    """Record warm-start donors + fit/persist the cost model — ONCE.
+
+    Idempotent: if the manifest already holds a ``transfer`` block (the
+    normal resume / fleet-worker path) nothing is recomputed.  Otherwise:
+
+    1. every donor root is opened (missing manifests raise);
+    2. each planned batch gets its per-cell nearest donors
+       (:func:`donor_distance`) and the weights snapshot of its overall
+       nearest donor's batch, recorded under
+       ``manifest["transfer"]["donors"][batch.key]``;
+    3. the persistent cost model is fitted on every archived (serving
+       context, PPA) pair of the donor roots and saved under
+       ``<root>/model/cost/``, with the leave-one-cell-out eval written
+       to ``<root>/model/eval.json``.
+
+    The manifest write is atomic, and everything recorded is a
+    deterministic function of the donor stores — see the module
+    docstring's determinism doctrine."""
+    if "transfer" in store.manifest:
+        return store.manifest["transfer"]
+    spec = store.spec
+    if not spec.transfer_from:
+        raise ValueError("prepare_store needs spec.transfer_from donors")
+    roots = [os.path.abspath(r) for r in spec.transfer_from]
+    stores = [CampaignStore.open(r) for r in roots]
+    by_root = dict(zip(roots, stores))
+    pool = _donor_pool(roots, stores)
+    if not pool:
+        raise ValueError(f"transfer_from roots {roots} hold no completed "
+                         "cells to warm-start from")
+    record: Dict = dict(roots=roots, donors={})
+    for batch in plan_cached(spec):
+        cells_rec: Dict[str, Dict] = {}
+        for cell in batch.cells:
+            wl_t = _wl_log(cell.arch, spec.seq_len, spec.batch)
+            best = min(pool, key=lambda p: (donor_distance(
+                wl_t, cell.node_nm, cell.mode,
+                p["wl"], p["node_nm"], p["mode"]), p["root"], p["cell_id"]))
+            cells_rec[cell.cell_id] = dict(
+                root=best["root"], cell_id=best["cell_id"],
+                distance=round(donor_distance(
+                    wl_t, cell.node_nm, cell.mode, best["wl"],
+                    best["node_nm"], best["mode"]), 6))
+        nearest = min(cells_rec.values(), key=lambda d: d["distance"])
+        weights = None
+        bid = _donor_batch_id(by_root[nearest["root"]], nearest["cell_id"])
+        if bid is not None:
+            wdir = find_weights(nearest["root"], bid)
+            if wdir is not None:
+                weights = dict(root=nearest["root"], batch_id=bid,
+                               dir=os.path.abspath(wdir))
+        record["donors"][batch.key] = dict(cells=cells_rec, weights=weights)
+    record["cost_model"] = _fit_and_persist(store, roots, seed=spec.seed,
+                                            progress=progress)
+    store.manifest["transfer"] = record
+    store.save_manifest()
+    n_w = sum(1 for d in record["donors"].values() if d["weights"])
+    progress(f"[transfer] {len(record['donors'])} batches warm-started "
+             f"from {len(pool)} donor cells ({n_w} with weights) "
+             f"across {len(roots)} root(s)")
+    return record
+
+
+def _fit_and_persist(store: CampaignStore, roots: List[str], *,
+                     seed: int, progress: Callable[[str], None]) -> Optional[Dict]:
+    """Fit the persistent cost model from the donor archives, save it
+    under ``<root>/model/cost/`` and its held-out eval to
+    ``model/eval.json``.  Donors whose cells all finished infeasible
+    (empty archives) yield no training rows — recorded as None, warm
+    starts still proceed on weights alone."""
+    from repro.launch.recommend import ArchiveIndex
+    from repro.models import cost_model as cm
+    try:
+        index = ArchiveIndex.build(roots)
+    except ValueError:
+        progress("[transfer] donor archives hold no frontier points; "
+                 "skipping cost model")
+        return None
+    model = cm.fit_cost_model(index, seed=seed)
+    cm.save_cost_model(model, store.root)
+    resid = cm.holdout_residuals(index, seed=seed)
+    os.makedirs(store.model_dir(), exist_ok=True)
+    fsutil.atomic_write_json(
+        os.path.join(store.model_dir(), EVAL_NAME),
+        dict(kind="cost_model_eval", n_cells=model.meta["n_cells"],
+             n_rows=model.meta["n_rows"],
+             resid_var=model.meta["resid_var"],
+             held_out_sq_residual=resid))
+    return dict(n_rows=model.meta["n_rows"], n_cells=model.meta["n_cells"],
+                resid_var=model.meta["resid_var"])
+
+
+# ------------------------------------------------------------ with_transfer
+def with_transfer(spec: CampaignSpec, roots: List[str]) -> CampaignSpec:
+    """Arm ``spec`` for transfer: validate the donor roots, fit the cost
+    model, and fill ``spec.priorities`` with each batch's predicted
+    episodes-to-feasible (summed over its cells) so ``plan`` runs the
+    expensive batches first and ``shard_batches`` deals LPT.
+
+    Priorities live IN the spec — hence the manifest — so ``--resume``
+    and every fleet worker re-derive the identical prioritized plan
+    without refitting anything.  Donors with no archived points still
+    transfer (weights-only warm start); priorities are then omitted and
+    execution order falls back to spec order."""
+    roots = [os.path.abspath(str(r)) for r in roots]
+    for r in roots:
+        CampaignStore.open(r)           # fail fast on a bad root
+    base = dataclasses.replace(spec, transfer_from=roots, priorities=None)
+    from repro.launch.recommend import ArchiveIndex
+    from repro.models import cost_model as cm
+    try:
+        model = cm.fit_cost_model(ArchiveIndex.build(roots),
+                                  seed=spec.seed)
+    except ValueError:
+        return base
+    pri: Dict[str, float] = {}
+    for b in plan_cached(base):
+        ctxs = np.stack([cell_context(c.arch, c.node_nm, c.mode,
+                                      spec.seq_len, spec.batch)
+                         for c in b.cells])
+        pri[b.key] = round(float(np.sum(model.predict_episodes(ctxs))), 6)
+    return dataclasses.replace(base, priorities=pri)
+
+
+# ------------------------------------------------------------- warm start
+def load_warm_start(store: CampaignStore, batch: CellBatch,
+                    workload) -> Optional[Dict]:
+    """Materialize the recorded donor into a ``run_search_cells``
+    ``warm_start`` dict: donor SAC/surrogate weight leaves (``flat``)
+    plus, per target cell, the donor frontier RE-EVALUATED under the
+    target's (workload, node, mode) — only analytically feasible
+    designs survive, stamped ``episode=0``, with the best incumbent
+    ``(ppa_score, cfg, metrics)`` alongside so episode traces reflect
+    the warm start from step one.
+
+    Reads ONLY the manifest's transfer record and the (immutable) donor
+    artifacts it names, so every worker / resume derives the same seed.
+    Returns None when the record carries nothing usable (no weights
+    snapshot and no feasible donor designs)."""
+    rec = (store.manifest.get("transfer") or {}).get("donors", {}) \
+        .get(batch.key)
+    if not rec:
+        return None
+    from repro.checkpoint import manager as ckpt_mod
+    flat = None
+    w = rec.get("weights")
+    if w and w.get("dir"):
+        try:
+            flat, _ = ckpt_mod.restore_flat(w["dir"])
+        except (OSError, KeyError):
+            # a pruned/corrupt donor snapshot degrades to archive-only
+            # seeding rather than failing the batch
+            flat = None
+    import jax.numpy as jnp
+    from repro.core.pareto import ArchiveEntry
+    from repro.ppa import config_space as cs
+    from repro.ppa.analytic import M_IDX, evaluate_vec_jit, node_vector
+    from repro.ppa.nodes import node_params
+    wl_vec = jnp.asarray(workload.features)
+    opened: Dict[str, CampaignStore] = {}
+    cells_out: List[Optional[Dict]] = []
+    for cell in batch.cells:
+        d = (rec.get("cells") or {}).get(cell.cell_id)
+        if not d:
+            cells_out.append(None)
+            continue
+        try:
+            ds = opened.get(d["root"]) or opened.setdefault(
+                d["root"], CampaignStore.open(d["root"]))
+        except FileNotFoundError:
+            cells_out.append(None)
+            continue
+        src = ds.load_archive(d["cell_id"])
+        if not src.entries:
+            cells_out.append(None)
+            continue
+        cfgs = np.asarray(cs.project(jnp.asarray(np.stack(
+            [np.asarray(e.cfg, np.float32) for e in src.entries]))))
+        node_row = jnp.asarray(node_vector(
+            node_params(cell.node_nm, low_power=cell.mode != "high_perf"),
+            high_perf=cell.mode == "high_perf"))
+        m = np.asarray(evaluate_vec_jit(
+            jnp.asarray(cfgs), wl_vec,
+            jnp.broadcast_to(node_row, (len(cfgs), node_row.shape[0]))))
+        feas = np.nonzero(m[:, M_IDX["feasible"]] > 0.0)[0]
+        if not feas.size:
+            cells_out.append(None)
+            continue
+        entries = [ArchiveEntry.from_metrics(cfgs[i], m[i], episode=0)
+                   for i in feas]
+        j = int(feas[np.argmin(m[feas, M_IDX["ppa_score"]])])
+        best = (float(m[j, M_IDX["ppa_score"]]), cfgs[j].copy(),
+                m[j].copy())
+        cells_out.append(dict(entries=entries, best=best))
+    if flat is None and not any(cells_out):
+        return None
+    return dict(flat=flat, cells=cells_out)

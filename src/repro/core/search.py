@@ -278,7 +278,10 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
                      checkpoint_dir: Optional[str] = None,
                      checkpoint_every: int = 0,
                      resume: bool = False,
-                     devices: Optional[int] = None) -> List[SearchResult]:
+                     devices: Optional[int] = None,
+                     warm_start: Optional[Dict] = None,
+                     save_weights_to: Optional[str] = None
+                     ) -> List[SearchResult]:
     """Algorithm 1 on the batched engine over a mixed-node *cell batch*.
 
     Each entry of ``node_nms`` is one search cell; every cell gets
@@ -328,6 +331,21 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
     B — ``devices`` only buys wall-clock, which is why checkpoints and
     campaign fingerprints carry no device count and a checkpoint written
     at one mesh size resumes exactly at another.
+
+    ``warm_start`` (cross-campaign transfer; see
+    ``repro.campaign.transfer``): seeds the fresh loop state before the
+    first dispatch — ``warm_start["flat"]`` holds donor SAC/surrogate
+    parameter leaves (keys ``sac/<leaf>`` / ``sur_params/<leaf>``, the
+    layout :func:`repro.checkpoint.manager.restore_flat` returns for a
+    weights snapshot), and ``warm_start["cells"][c]`` optionally carries
+    ``entries`` (ArchiveEntry seeds, re-evaluated for THIS cell) and
+    ``best`` (an ``(score, cfg, metrics)`` incumbent).  Applied ONLY on a
+    fresh start: a checkpoint resume restores the already-warmed state,
+    so kill/resume of a warm-started run stays bit-exact for free.
+
+    ``save_weights_to``: after the final dispatch, snapshot the final
+    SAC + surrogate parameters there (atomic, ``keep=1``) so a later
+    campaign can warm-start from this batch.
     """
     sc = search or SearchConfig()
     n_cells = len(node_nms)
@@ -455,6 +473,22 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
         t_env = start_t * lanes
         resumed = True
     if not resumed:
+        if warm_start is not None:
+            ws_flat = warm_start.get("flat")
+            if ws_flat:
+                sac_state = _unflatten_from(ws_flat, "sac", sac_state)
+                surrogate.params = _unflatten_from(ws_flat, "sur_params",
+                                                   surrogate.params)
+            for c, seed_cell in enumerate(warm_start.get("cells") or []):
+                if c >= n_cells or not seed_cell:
+                    continue
+                archives[c].insert_batch(list(seed_cell.get("entries")
+                                              or []))
+                sb = seed_cell.get("best")
+                if sb is not None:
+                    best[c] = (float(sb[0]),
+                               np.asarray(sb[1], np.float32).copy(),
+                               np.asarray(sb[2], np.float32).copy())
         s = env.reset()      # (B, 52)
 
     # ---- telemetry: read-only taps on the loop's own state ---------------
@@ -696,6 +730,17 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
                 and (t + 1) % checkpoint_every == 0 and t + 1 < n_steps:
             with obs_trace.span("checkpoint", cat="search", step=t + 1):
                 _checkpoint(t + 1)
+
+    if save_weights_to:
+        # final-weights snapshot for cross-campaign warm-starts; plain
+        # ckpt_mod.save (NOT _save_search_ckpt — that hook is the
+        # kill/resume tests' checkpoint counter) and derived purely from
+        # loop state, so a resumed finish re-writes identical bytes
+        ckpt_mod.save(dict(sac=sac_state, sur_params=surrogate.params),
+                      save_weights_to, max(1, t_env), keep=1,
+                      extra=dict(kind="batch_weights",
+                                 node_nms=[int(n) for n in node_nms],
+                                 seed=sc.seed, high_perf=bool(high_perf)))
 
     # ---- final selection per cell: Pareto-scalarized (paper §3.10) -------
     results = []

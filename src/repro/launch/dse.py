@@ -219,6 +219,16 @@ def validate_args(ap: argparse.ArgumentParser,
     if a.campaign and a.resume:
         ap.error("--campaign starts a new run and --resume continues an "
                  "existing one; pass exactly one")
+    if a.transfer_from and a.resume:
+        ap.error("--transfer-from: a resumed campaign keeps the warm-start "
+                 "donors recorded in its manifest; start a new campaign to "
+                 "change them")
+    if a.transfer_from and not a.campaign:
+        ap.error("--transfer-from warm-starts a campaign from completed "
+                 "run directories; pass --campaign with it")
+    for r in a.transfer_from or []:
+        if not os.path.isfile(os.path.join(r, "manifest.json")):
+            ap.error(f"--transfer-from: no campaign manifest under {r}")
     if a.campaign and not os.path.isfile(a.campaign):
         ap.error(f"--campaign grid file not found: {a.campaign}")
     if a.resume and not os.path.isfile(os.path.join(a.resume,
@@ -277,6 +287,14 @@ def main(argv: Optional[List[str]] = None) -> None:
                          "unfinished batches are re-dealt)")
     ap.add_argument("--campaign-root", default="experiments/campaigns",
                     help="parent directory for new campaign run dirs")
+    ap.add_argument("--transfer-from", action="append", default=None,
+                    metavar="RUN_DIR",
+                    help="completed campaign run directory whose archives "
+                         "and weights warm-start this campaign and train "
+                         "its persistent cost model (repeatable; see "
+                         "repro.campaign.transfer).  Batches are then "
+                         "packed by predicted cost so workers drain "
+                         "together")
     ap.add_argument("--workers", type=int, default=None,
                     help="shard the campaign's cell batches across this "
                          "many shared-nothing worker processes "
@@ -347,6 +365,12 @@ def main(argv: Optional[List[str]] = None) -> None:
                 overrides["devices"] = devices
             if overrides:
                 spec = dataclasses.replace(spec, **overrides)
+            if a.transfer_from:
+                from repro.campaign import transfer as transfer_mod
+                try:
+                    spec = transfer_mod.with_transfer(spec, a.transfer_from)
+                except (ValueError, FileNotFoundError) as e:
+                    ap.error(f"--transfer-from: {e}")
             root = os.path.join(a.campaign_root, spec.name)
             if a.workers is not None:
                 # any explicit --workers (including 1) runs the fleet

@@ -1,0 +1,215 @@
+"""Persistent learned cost model over campaign archives.
+
+Campaign run directories accumulate measured (serving context, PPA) pairs
+— every frontier entry of every (workload, node, mode) cell.  This module
+turns that write-once artifact into a reusable model with two heads:
+
+* a **PPA head** — a ``fit_index_surrogate``-style net (the serving-sized
+  ``SERVE_HIDDEN`` MLP) mapping log1p(workload features || node constants
+  || design vector) -> log1p(power, perf, area), refit deterministically
+  from the merged archives; and
+* an **episodes-to-feasible head** — a closed-form ridge regression from
+  the cell context (workload || node half only) to log1p of the cell's
+  observed episodes-to-first-frontier-point.  This is the *cost* signal
+  behind priority-aware packing: ``planner.plan`` orders batch execution
+  (and ``distrib.shard_batches`` deals fleet shards) by the summed
+  predicted episodes of each batch's cells, so workers drain together.
+
+The episodes-to-feasible target is the earliest ``episode`` stamp among a
+cell's surviving frontier entries — a deterministic, archived proxy for
+how long the search needed before feasible designs started landing
+(dominated early points are pruned, so it upper-bounds the true first
+feasible episode; packing only needs the relative ordering).
+
+Everything here is a deterministic function of the archives and the seed:
+no wall-clock, no unseeded randomness — two fits of the same roots
+produce bitwise-identical models, which is what lets warm-start planning
+live in the campaign manifest.
+
+Persistence rides the atomic checkpoint manager: ``save`` / ``load``
+under ``<root>/model/cost/``.  ``holdout_residuals`` is the eval harness
+— leave-one-cell-out refits reporting the mean squared log-space PPA
+residual per held-out cell (written to ``<root>/model/eval.json`` by
+``repro.campaign.transfer.prepare_store``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.checkpoint import manager as ckpt_mod
+from repro.ppa import surrogate as sur_mod
+from repro.ppa.surrogate import SERVE_HIDDEN, Surrogate, fit_index_surrogate
+
+#: ridge regularizer for the episodes head — contexts are log1p-scaled
+#: O(1..30) values and campaigns may hold very few cells, so the prior
+#: dominates until enough cells accumulate (safe: an underfit head
+#: predicts near-uniform costs, i.e. the deal degrades to round-robin)
+RIDGE_LAMBDA = 1.0
+
+COST_STEPS_DEFAULT = 300
+HOLDOUT_STEPS_DEFAULT = 120
+
+
+@dataclasses.dataclass
+class CostModel:
+    """Fitted persistent cost model (see module docstring).
+
+    ``sur`` predicts log1p (power, perf, area) from full serving contexts;
+    ``cost_w`` is the episodes head's ridge weight vector over the
+    bias-augmented cell context; ``meta`` records fit provenance
+    (dims, seed, steps, rows, source cells) and the full-dataset
+    ``resid_var`` so calibration is comparable across refits.
+    """
+    sur: Surrogate
+    cost_w: np.ndarray
+    meta: Dict
+
+    # -------------------------------------------------------------- heads
+    def predict_ppa(self, x: np.ndarray) -> np.ndarray:
+        """(N, in_dim) serving contexts -> (N, 3) linear-space PPA."""
+        return self.sur(np.asarray(x, np.float32))
+
+    def predict_episodes(self, ctx: np.ndarray) -> np.ndarray:
+        """(N, ctx_dim) cell contexts -> (N,) predicted episodes-to-
+        feasible (linear space, floored at 0)."""
+        a = _augment(np.asarray(ctx, np.float64))
+        z = a @ self.cost_w
+        return np.expm1(np.maximum(z, 0.0))
+
+
+def _augment(ctx: np.ndarray) -> np.ndarray:
+    if ctx.ndim == 1:
+        ctx = ctx[None]
+    return np.concatenate([ctx, np.ones((ctx.shape[0], 1))], axis=1)
+
+
+def _ridge(a: np.ndarray, z: np.ndarray,
+           lam: float = RIDGE_LAMBDA) -> np.ndarray:
+    eye = np.eye(a.shape[1])
+    eye[-1, -1] = 0.0            # never regularize the bias
+    return np.linalg.solve(a.T @ a + lam * eye, a.T @ z)
+
+
+# ------------------------------------------------------------------ data
+def dataset(index) -> Tuple[np.ndarray, np.ndarray, List[str]]:
+    """:meth:`ArchiveIndex.training_set` plus per-row cell provenance —
+    the extra column the held-out eval needs.  Row order is deterministic
+    (sorted cell ids, archive entry order)."""
+    from repro.launch.recommend import split_cell_id
+    xs, ys, rows = [], [], []
+    for cid in sorted(index.cells):
+        arch, node_nm, mode = split_cell_id(cid)
+        ctx = index.query_context(index.wl_features(arch), node_nm, mode)
+        for e in index.cells[cid].entries:
+            from repro.launch.recommend import _log1p
+            xs.append(np.concatenate([ctx, _log1p(e.cfg)]))
+            ys.append(np.log1p(np.maximum(
+                [e.power_mw, e.perf_gops, e.area_mm2], 0.0)))
+            rows.append(cid)
+    return (np.asarray(xs, np.float32), np.asarray(ys, np.float32), rows)
+
+
+def cell_contexts(index) -> Dict[str, np.ndarray]:
+    """cell_id -> (WL_DIM + NODE_DIM,) log1p cell context (the episodes
+    head's input: workload + node halves, no design vector)."""
+    from repro.launch.recommend import split_cell_id
+    out = {}
+    for cid in sorted(index.cells):
+        arch, node_nm, mode = split_cell_id(cid)
+        out[cid] = index.query_context(index.wl_features(arch),
+                                       node_nm, mode)
+    return out
+
+
+def episodes_to_feasible(index) -> Dict[str, float]:
+    """cell_id -> earliest frontier entry's episode stamp (the archived
+    episodes-to-feasible proxy; see module docstring)."""
+    return {cid: float(min(e.episode for e in ar.entries))
+            for cid, ar in sorted(index.cells.items()) if len(ar)}
+
+
+# ------------------------------------------------------------------- fit
+def fit_cost_model(index, *, steps: int = COST_STEPS_DEFAULT,
+                   seed: int = 0) -> CostModel:
+    """Fit both heads from an :class:`~repro.launch.recommend.
+    ArchiveIndex` (build one with ``ArchiveIndex.build(roots)``)."""
+    x, y, rows = dataset(index)
+    if not len(x):
+        raise ValueError("cost model needs at least one archived frontier "
+                         "point; run (and reconcile) a campaign first")
+    sur = fit_index_surrogate(x, y, steps=steps, seed=seed,
+                              hidden=SERVE_HIDDEN)
+    ctxs = cell_contexts(index)
+    costs = episodes_to_feasible(index)
+    cids = sorted(set(ctxs) & set(costs))
+    a = _augment(np.stack([ctxs[c] for c in cids]).astype(np.float64))
+    z = np.log1p(np.asarray([max(0.0, costs[c]) for c in cids]))
+    cost_w = _ridge(a, z)
+    meta = dict(in_dim=int(x.shape[1]), ctx_dim=int(a.shape[1] - 1),
+                seed=int(seed), steps=int(steps), n_rows=int(x.shape[0]),
+                n_cells=len(cids), cells=cids,
+                resid_var=float(sur.resid_var),
+                episodes_to_feasible={c: costs[c] for c in cids})
+    return CostModel(sur=sur, cost_w=cost_w, meta=meta)
+
+
+def holdout_residuals(index, *, steps: int = HOLDOUT_STEPS_DEFAULT,
+                      seed: int = 0) -> Dict[str, float]:
+    """Leave-one-cell-out eval harness: for each cell, refit the PPA head
+    on every OTHER cell's rows and report the mean squared log-space
+    residual on the held-out cell.  With a single cell there is nothing
+    to hold out against — its self-fit residual is reported instead
+    (flagged by the n_cells=1 meta a caller can check)."""
+    x, y, rows = dataset(index)
+    cids = sorted(set(rows))
+    rows = np.asarray(rows)
+    out: Dict[str, float] = {}
+    for cid in cids:
+        held = rows == cid
+        rest = ~held if len(cids) > 1 else held
+        sur = fit_index_surrogate(x[rest], y[rest], steps=steps, seed=seed,
+                                  hidden=SERVE_HIDDEN)
+        import jax.numpy as jnp
+        errs = sur_mod._calib_errors_log(
+            sur.params, jnp.asarray(x[held]), jnp.asarray(y[held]))
+        out[cid] = float(np.mean(np.asarray(errs)))
+    return out
+
+
+# ----------------------------------------------------------- persistence
+def cost_dir(root: str) -> str:
+    import os
+    return os.path.join(root, "model", "cost")
+
+
+def save_cost_model(model: CostModel, root: str) -> str:
+    """Persist under ``<root>/model/cost/`` (atomic; one step kept —
+    refits supersede, they never need history)."""
+    return ckpt_mod.save(
+        dict(sur_params=model.sur.params, cost_w=model.cost_w),
+        cost_dir(root), step=1, keep=1,
+        extra=dict(kind="cost_model", **model.meta))
+
+
+def load_cost_model(root: str) -> Optional[CostModel]:
+    """Reload a persisted cost model, or None if the root has none."""
+    d = cost_dir(root)
+    if ckpt_mod.latest_step(d) is None:
+        return None
+    flat, manifest = ckpt_mod.restore_flat(d)
+    meta = dict(manifest["extra"])
+    meta.pop("kind", None)
+    params = {layer: dict(w=flat[f"sur_params/{layer}/w"],
+                          b=flat[f"sur_params/{layer}/b"])
+              for layer in ("l1", "l2", "head")}
+    import jax.numpy as jnp
+    params = {k: {kk: jnp.asarray(vv) for kk, vv in v.items()}
+              for k, v in params.items()}
+    sur = Surrogate(params=params, opt_state=sur_mod.init_opt(params),
+                    resid_var=float(meta.get("resid_var", float("inf"))))
+    return CostModel(sur=sur,
+                     cost_w=np.asarray(flat["cost_w"], np.float64),
+                     meta=meta)

@@ -100,10 +100,17 @@ class Surrogate:
         self.params, self.opt_state, loss = train_step(
             self.params, self.opt_state, jnp.asarray(x), y)
         loss = float(loss)
-        # running residual variance (Eq. 66), EMA over batches
+        # running residual variance (Eq. 66), EMA over batches.  Mirrors
+        # ScreenGate.observe's non-finite guard: a NaN/inf batch loss (a
+        # diverged step, or an inf analytic metric on a degenerate design)
+        # is skipped rather than folded in — folding it would poison the
+        # EMA permanently and `accepted` could never open.  The isfinite
+        # first-update check also covers a NaN-seeded resid_var, which the
+        # old `== inf` comparison silently missed.
         var = loss / N_TARGETS
-        self.resid_var = var if self.resid_var == float("inf") else (
-            0.95 * self.resid_var + 0.05 * var)
+        if np.isfinite(var):
+            self.resid_var = var if not np.isfinite(self.resid_var) else (
+                0.95 * self.resid_var + 0.05 * var)
         self.n_updates += 1
         return loss
 
@@ -200,18 +207,30 @@ def fit_index_surrogate(x: np.ndarray, y_log: np.ndarray, *,
     sur = Surrogate.create(x.shape[1], seed=seed, hidden=hidden)
     rng = np.random.default_rng(seed)
     xd, yd = jnp.asarray(x), jnp.asarray(y)
-    loss = jnp.inf
     for _ in range(steps):
         if x.shape[0] > minibatch:
             pick = rng.integers(0, x.shape[0], size=minibatch)
             xb, yb = jnp.asarray(x[pick]), jnp.asarray(y[pick])
         else:
             xb, yb = xd, yd
-        sur.params, sur.opt_state, loss = train_step(
+        sur.params, sur.opt_state, _ = train_step(
             sur.params, sur.opt_state, xb, yb)
         sur.n_updates += 1
-    sur.resid_var = float(loss) / N_TARGETS
+    # the reported calibration must cover the FULL dataset, not whichever
+    # minibatch happened to come last — serve/transfer compare resid_var
+    # across index builds, and a subsampled tail makes that comparison
+    # noise.  Same per-sample residual as calib_errors, but on the already
+    # log1p-scaled targets.
+    sur.resid_var = float(jnp.mean(_calib_errors_log(sur.params, xd, yd)))
     return sur
+
+
+@jax.jit
+def _calib_errors_log(params: Dict, x: jnp.ndarray,
+                      y_log: jnp.ndarray) -> jnp.ndarray:
+    """:func:`calib_errors` for targets already in log1p space — the
+    index/transfer datasets store (context, log1p PPA) pairs directly."""
+    return jnp.mean((predict(params, x) - y_log) ** 2, axis=-1)
 
 
 @jax.jit

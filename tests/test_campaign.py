@@ -364,3 +364,52 @@ def test_cli_campaign_end_to_end(tmp_path):
     assert store.manifest["git_sha"]
     # and --resume on a finished campaign is a no-op that still reports
     dse.main(["--resume", str(tmp_path / "runs" / "cli")])
+
+
+def test_campaign_warm_start_kill_resume_exact(tmp_path, monkeypatch):
+    """Kill a warm-started (--transfer-from) campaign mid-batch after a
+    checkpoint; resume must be bit-exact vs the uninterrupted warm run.
+    The manifest-recorded donors — never a recomputation — define the
+    warm seed, and a checkpoint resume bypasses warm-start entirely (the
+    checkpoint already holds the warmed state)."""
+    from repro.campaign import transfer as transfer_mod
+    donor = run_campaign(str(tmp_path / "donor"),
+                         tiny_spec("wdonor", checkpoint_every=0),
+                         progress=lambda m: None)
+    tspec = transfer_mod.with_transfer(
+        tiny_spec("wtgt", nodes=[5, 10], episodes=48, max_envs=4,
+                  checkpoint_every=3), [donor.root])
+    assert tspec.priorities is not None
+    ref = run_campaign(str(tmp_path / "ref"), tspec,
+                       progress=lambda m: None)
+
+    real_save = search_mod._save_search_ckpt
+    saves = []
+
+    def killing_save(*args, **kw):
+        out = real_save(*args, **kw)
+        saves.append(args[1])
+        if len(saves) == 2:
+            raise KeyboardInterrupt("simulated kill after checkpoint")
+        return out
+
+    monkeypatch.setattr(search_mod, "_save_search_ckpt", killing_save)
+    root = str(tmp_path / "warm")
+    with pytest.raises(KeyboardInterrupt):
+        run_campaign(root, tspec, progress=lambda m: None)
+    monkeypatch.setattr(search_mod, "_save_search_ckpt", real_save)
+    store = run_campaign(root, resume=True, progress=lambda m: None)
+
+    assert store.all_done()
+    # the interrupted run and its resume derived the identical transfer
+    # record the reference run did
+    assert store.manifest["transfer"] == ref.manifest["transfer"]
+    assert store.manifest["transfer"]["donors"]
+    for cid, s_ref in ref.summaries().items():
+        s = store.load_summary(cid)
+        assert s["ppa_score"] == s_ref["ppa_score"], cid
+        assert s["episodes"] == s_ref["episodes"], cid
+        f1 = ref.load_archive(cid).frontier()
+        f2 = store.load_archive(cid).frontier()
+        for k in f1:
+            assert np.array_equal(np.sort(f1[k]), np.sort(f2[k])), (cid, k)

@@ -290,3 +290,28 @@ def test_cli_fleet_end_to_end(tmp_path, fleet_cache):
     # resume of the finished fleet: reconcile + report only, no workers
     dse.main(["--resume", root])
     assert CampaignStore.open(root).all_done()
+
+
+def test_fleet_warm_start_w2_matches_w1_bitwise(tmp_path, fleet_cache):
+    """A warm-started (--transfer-from) fleet must fingerprint identically
+    to the W=1 warm run: every worker mirrors the top-level manifest's
+    transfer record verbatim, and the priority-LPT deal only changes
+    WHERE batches run (seeds derive from the global batch index)."""
+    from repro.campaign import transfer as transfer_mod
+    donor = run_campaign(str(tmp_path / "donor"), smoke_spec("wdonor"),
+                         progress=_silent)
+    tspec = transfer_mod.with_transfer(smoke_spec("weq"), [donor.root])
+    assert tspec.priorities is not None
+    ref = run_campaign(str(tmp_path / "w1"), tspec, progress=_silent)
+    store = fleet_mod.run_fleet(str(tmp_path / "w2"), tspec, workers=2,
+                                progress=_silent)
+    assert store.all_done()
+    assert fingerprint(store) == fingerprint(ref)
+    top = store.manifest["transfer"]
+    assert top["donors"] and top == ref.manifest["transfer"]
+    mirrored = 0
+    for wr in glob.glob(os.path.join(store.root, "worker-*")):
+        if os.path.isfile(os.path.join(wr, "manifest.json")):
+            assert CampaignStore.open(wr).manifest["transfer"] == top
+            mirrored += 1
+    assert mirrored == 2

@@ -1,0 +1,422 @@
+"""Cross-campaign transfer: donor lookup + warm-start record determinism,
+the persistent cost model (fit/persist/reload + held-out eval), priority-
+aware packing (plan order + LPT fleet deal), the --transfer-from CLI
+surface, and the four bugfix regressions that rode along (surrogate EMA
+NaN guard, novel-only merge appends, falsy-TTL lease expiry, full-dataset
+resid_var)."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.campaign import CampaignSpec, CampaignStore, run_campaign
+from repro.campaign import transfer as transfer_mod
+from repro.campaign.distrib import shard_batches
+from repro.campaign.planner import cells, plan, plan_cached
+from repro.campaign.store import (DEFAULT_LEASE_TTL_S, lease_expired,
+                                  merge_runs)
+from repro.checkpoint import manager as ckpt_mod
+from repro.core.pareto import ArchiveEntry
+from repro.launch import dse
+from repro.launch.recommend import ArchiveIndex
+from repro.models import cost_model as cm
+from repro.ppa import config_space as cs
+from repro.ppa import surrogate as sur_mod
+from repro.ppa.analytic import M_DIM, M_IDX
+
+ARCH = "smollm-135m"
+_silent = lambda m: None
+
+
+def _spec(name, **kw):
+    base = dict(name=name, workloads=[ARCH], nodes=[3, 7],
+                modes=["high_perf"], episodes=32, lanes=4, max_envs=4,
+                seed=0, seq_len=256, batch=1, checkpoint_every=0)
+    base.update(kw)
+    return CampaignSpec(**base)
+
+
+def _entries(n, seed=0, episode0=0):
+    """n mutually non-dominating archive entries with in-range designs
+    (power and perf both increase, so nothing dominates anything)."""
+    rng = np.random.default_rng(seed)
+    return [ArchiveEntry(
+        cfg=rng.uniform(cs.LO, cs.HI).astype(np.float32),
+        power_mw=10.0 + i, perf_gops=50.0 + 10.0 * i, area_mm2=1.0,
+        tok_s=100.0, ppa_score=0.5 - 0.01 * i, episode=episode0 + 4 * i)
+        for i in range(n)]
+
+
+def _fab_campaign(root, spec, *, points=3):
+    """Fabricate a completed campaign run dir without running any search:
+    every cell done, with a small synthetic frontier."""
+    store = CampaignStore.create(str(root), spec)
+    for k, cell in enumerate(cells(spec)):
+        store.complete_cell(
+            cell, dict(cell_id=cell.cell_id, ppa_score=0.5 - 0.1 * k,
+                       episodes=spec.episodes, wall_s=1.0),
+            _entries(points, seed=k, episode0=2 * k))
+    return store
+
+
+# ===================================================== bugfix regressions
+def test_surrogate_update_skips_nonfinite_batches():
+    """A NaN/inf batch loss must not poison the resid_var EMA: the gate
+    could otherwise never open again (and a non-finite FIRST update used
+    to seed the EMA with NaN, which `== inf` never caught)."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(16, 8)).astype(np.float32)
+    good = np.zeros((16, M_DIM), np.float32)
+    good[:, M_IDX["power_mw"]] = 100.0
+    good[:, M_IDX["perf_gops"]] = 50.0
+    good[:, M_IDX["area_mm2"]] = 2.0
+    bad = good.copy()
+    bad[0, M_IDX["perf_gops"]] = np.inf
+
+    sur = sur_mod.Surrogate.create(8, seed=0)
+    sur.update(x, good)
+    assert np.isfinite(sur.resid_var)
+    rv = sur.resid_var
+    loss = sur.update(x, bad)
+    assert not np.isfinite(loss)
+    assert sur.resid_var == rv, "non-finite batch folded into the EMA"
+    assert sur.n_updates == 2
+
+    # non-finite FIRST update: resid_var stays inf (never NaN), gate shut
+    fresh = sur_mod.Surrogate.create(8, seed=0)
+    fresh.update(x, bad)
+    assert np.isinf(fresh.resid_var) and not np.isnan(fresh.resid_var)
+    assert not fresh.accepted
+
+
+def test_merge_runs_appends_only_novel_points(tmp_path):
+    """Repeated merges must keep cells/*.jsonl at O(total distinct
+    points): the dedup key set is built from dst's raw on-disk records,
+    so re-merging an unchanged source appends nothing."""
+    spec = _spec("m", nodes=[3])
+    cell = cells(spec)[0]
+    src = _fab_campaign(tmp_path / "src", spec, points=3)
+    dst = CampaignStore.create(str(tmp_path / "dst"), spec)
+
+    merged = merge_runs(dst, [src.root])
+    assert len(merged[cell.cell_id]) == 3
+    path = dst._cell_path(cell.cell_id)
+    lines = lambda: sum(1 for _ in open(path))
+    n1 = lines()
+    for _ in range(3):                      # re-merge: nothing novel
+        merge_runs(dst, [src.root])
+    assert lines() == n1, "unchanged source re-appended its frontier"
+
+    # one genuinely novel point appends exactly one line
+    nov = ArchiveEntry(cfg=np.full(cs.DIM, 1.0, np.float32), power_mw=5.0,
+                      perf_gops=200.0, area_mm2=0.5, tok_s=300.0,
+                      ppa_score=0.1, episode=9)
+    src.append_points(cell.cell_id, [nov])
+    merge_runs(dst, [src.root])
+    assert lines() == n1 + 1
+    merge_runs(dst, [src.root])
+    assert lines() == n1 + 1
+
+
+def test_lease_expired_honors_falsy_and_sub_second_ttls():
+    """An explicit-but-falsy ttl (0.0, e.g. a sub-second chaos harness
+    rounding down) must expire immediately — not get promoted to the 15 s
+    default by an `or`-chain — and sub-second TTLs must be respected."""
+    base = dict(worker=0, pid=1, host="h", ts=1000.0, batch="b",
+                done=False)
+    assert lease_expired(dict(base, ttl_s=0.0), now=1000.01)
+    assert not lease_expired(dict(base, ttl_s=0.0), now=1000.0)
+    # sub-second TTL
+    assert not lease_expired(dict(base, ttl_s=0.25), now=1000.2)
+    assert lease_expired(dict(base, ttl_s=0.25), now=1000.3)
+    # a null lease ttl falls back to the default, exactly
+    assert not lease_expired(dict(base, ttl_s=None),
+                             now=1000.0 + DEFAULT_LEASE_TTL_S - 1)
+    assert lease_expired(dict(base, ttl_s=None),
+                         now=1000.0 + DEFAULT_LEASE_TTL_S + 1)
+    # a falsy caller OVERRIDE beats the lease's own ttl too
+    assert lease_expired(dict(base, ttl_s=60.0), now=1000.5, ttl_s=0.0)
+    # done / missing leases never expire
+    assert not lease_expired(dict(base, ttl_s=0.0, done=True), now=2000.0)
+    assert not lease_expired(None, now=2000.0)
+
+
+def test_fit_index_surrogate_reports_full_dataset_resid_var():
+    """resid_var must be the calibration over the FULL dataset, not
+    whatever minibatch happened to come last — serve/transfer compare it
+    across index builds."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(64, 6)).astype(np.float32)
+    w = rng.normal(size=(6, 3)).astype(np.float32)
+    y = (x @ w).astype(np.float32)
+    steps, mb = 30, 8
+    sur = sur_mod.fit_index_surrogate(x, y, steps=steps, seed=0,
+                                      minibatch=mb)
+    full = float(np.mean(np.asarray(sur_mod._calib_errors_log(
+        sur.params, jnp.asarray(x), jnp.asarray(y)))))
+    assert sur.resid_var == pytest.approx(full, rel=1e-6)
+    # replay the seed-deterministic pick stream: the LAST minibatch's
+    # error is a different number, i.e. the old behavior is really gone
+    picks = np.random.default_rng(0)
+    for _ in range(steps):
+        pick = picks.integers(0, x.shape[0], size=mb)
+    last = float(np.mean(np.asarray(sur_mod._calib_errors_log(
+        sur.params, jnp.asarray(x[pick]), jnp.asarray(y[pick])))))
+    assert last != pytest.approx(full, rel=1e-6)
+
+
+# ======================================================= donor distance
+def test_donor_distance_metric():
+    wl = transfer_mod._wl_log(ARCH, 256, 1)
+    assert transfer_mod.donor_distance(wl, 5, "high_perf",
+                                       wl, 5, "high_perf") == 0.0
+    d7 = transfer_mod.donor_distance(wl, 5, "high_perf",
+                                     wl, 7, "high_perf")
+    d3 = transfer_mod.donor_distance(wl, 5, "high_perf",
+                                     wl, 3, "high_perf")
+    assert 0.0 < d7 < d3, "|log 5/7| must beat |log 5/3|"
+    # symmetric, and a cross-mode donor is a last resort
+    assert d7 == pytest.approx(transfer_mod.donor_distance(
+        wl, 7, "high_perf", wl, 5, "high_perf"))
+    assert transfer_mod.donor_distance(
+        wl, 5, "high_perf", wl, 5, "low_power") >= transfer_mod.MODE_PENALTY
+
+
+# ================================================ priority-aware packing
+def test_plan_priorities_reorder_execution_not_identity():
+    """Priorities reorder batch EXECUTION only: index, batch_id (hence
+    per-batch seeds) stay spec-order-derived, so fingerprints match the
+    unprioritised plan."""
+    spec = _spec("p")
+    ref = plan(spec)
+    assert [b.index for b in ref] == [0, 1]
+    pri = {ref[1].key: 10.0, ref[0].key: 1.0}
+    got = plan(dataclasses.replace(spec, priorities=pri))
+    assert [b.key for b in got] == [ref[1].key, ref[0].key]
+    assert {b.key: (b.index, b.batch_id) for b in got} == \
+           {b.key: (b.index, b.batch_id) for b in ref}
+    with pytest.raises(ValueError, match="priorities"):
+        _spec("bad", priorities={"k": "high"})
+
+
+def test_shard_batches_lpt_balances_predicted_load():
+    spec = _spec("s", nodes=[3, 5, 7, 10, 14])
+    batches = plan(spec)
+    assert len(batches) == 5
+    costs = [8.0, 5.0, 3.0, 2.0, 2.0]
+    pri = {b.key: c for b, c in zip(batches, costs)}
+    deal = shard_batches(batches, 2, priorities=pri)
+    # complete + disjoint
+    dealt = [b.batch_id for bs in deal.values() for b in bs]
+    assert sorted(dealt) == sorted(b.batch_id for b in batches)
+    # LPT: 8+2 vs 5+3+2 — drained together, not 8+3+2 vs 5+2
+    loads = {w: sum(pri[b.key] for b in bs) for w, bs in deal.items()}
+    assert loads == {0: 10.0, 1: 10.0}
+    # pure function of the batch SET + priorities
+    again = shard_batches(list(reversed(batches)), 2, priorities=pri)
+    assert {w: [b.batch_id for b in bs] for w, bs in deal.items()} == \
+           {w: [b.batch_id for b in bs] for w, bs in again.items()}
+    # degenerate all-equal predicted costs: the count tie-break keeps the
+    # deal balanced instead of piling every batch on slot 0
+    zero = shard_batches(batches, 2, priorities={b.key: 0.0
+                                                 for b in batches})
+    assert sorted(len(bs) for bs in zero.values()) == [2, 3]
+
+
+# ================================================== prepare_store record
+def test_prepare_store_records_nearest_donors_and_is_idempotent(
+        tmp_path, monkeypatch):
+    donor = _fab_campaign(tmp_path / "donor", _spec("donor"))
+    tspec = _spec("tgt", nodes=[5], transfer_from=[str(tmp_path / "donor")])
+    store = CampaignStore.create(str(tmp_path / "tgt"), tspec)
+    rec = transfer_mod.prepare_store(store, _silent)
+
+    batch = plan_cached(tspec)[0]
+    d = rec["donors"][batch.key]["cells"][batch.cells[0].cell_id]
+    assert d["cell_id"] == f"{ARCH}__7nm__high_perf"
+    assert d["root"] == os.path.abspath(str(tmp_path / "donor"))
+    assert d["distance"] > 0
+    # fabricated donors never snapshotted weights: recorded as absent
+    assert rec["donors"][batch.key]["weights"] is None
+    # the cost model was fitted over both donor cells and persisted,
+    # with the leave-one-cell-out eval alongside
+    assert rec["cost_model"]["n_cells"] == 2
+    assert cm.load_cost_model(store.root) is not None
+    with open(os.path.join(store.model_dir(), "eval.json")) as f:
+        ev = json.load(f)
+    assert set(ev["held_out_sq_residual"]) == \
+           {c.cell_id for c in cells(donor.spec)}
+
+    # idempotent: a second call must return the record verbatim without
+    # refitting anything (the resume / fleet-worker path)
+    def boom(*a, **kw):
+        raise AssertionError("prepare_store refit on re-entry")
+    monkeypatch.setattr(transfer_mod, "_fit_and_persist", boom)
+    assert transfer_mod.prepare_store(store, _silent) == rec
+    assert CampaignStore.open(store.root).manifest["transfer"] == rec
+
+
+def test_prepare_store_rejects_unusable_donors(tmp_path):
+    # no transfer_from on the spec
+    store = CampaignStore.create(str(tmp_path / "plain"), _spec("plain"))
+    with pytest.raises(ValueError, match="transfer_from"):
+        transfer_mod.prepare_store(store, _silent)
+    # donors exist but hold no completed cells
+    CampaignStore.create(str(tmp_path / "idle"), _spec("idle"))
+    tspec = _spec("t2", transfer_from=[str(tmp_path / "idle")])
+    store = CampaignStore.create(str(tmp_path / "t2"), tspec)
+    with pytest.raises(ValueError, match="no completed"):
+        transfer_mod.prepare_store(store, _silent)
+
+
+def test_find_weights_prefers_highest_step(tmp_path):
+    root, bid = str(tmp_path), "b000__x__high_perf__3nm"
+    assert transfer_mod.find_weights(root, bid) is None
+    ckpt_mod.save(dict(a=np.zeros(2)),
+                  os.path.join(root, "model", "weights", bid), step=2)
+    ckpt_mod.save(dict(a=np.ones(2)),
+                  os.path.join(root, "worker-1", "model", "weights", bid),
+                  step=5)
+    got = transfer_mod.find_weights(root, bid)
+    assert got == os.path.join(root, "worker-1", "model", "weights", bid)
+    flat, _ = ckpt_mod.restore_flat(got)
+    assert np.array_equal(flat["a"], np.ones(2))
+
+
+# ==================================================== persistent cost model
+def test_cost_model_fit_roundtrip_deterministic(tmp_path):
+    _fab_campaign(tmp_path / "donor", _spec("donor"))
+    index = ArchiveIndex.build([str(tmp_path / "donor")])
+    model = cm.fit_cost_model(index, steps=25, seed=3)
+    assert model.meta["n_rows"] == 6 and model.meta["n_cells"] == 2
+
+    x, y, rows = cm.dataset(index)
+    assert model.predict_ppa(x).shape == (6, 3)
+    ctx = np.stack(list(cm.cell_contexts(index).values()))
+    ep = model.predict_episodes(ctx)
+    assert ep.shape == (2,) and np.all(np.isfinite(ep)) and np.all(ep >= 0)
+
+    # bitwise-deterministic refit (what lets planning live in the manifest)
+    again = cm.fit_cost_model(ArchiveIndex.build([str(tmp_path / "donor")]),
+                              steps=25, seed=3)
+    assert np.array_equal(again.cost_w, model.cost_w)
+    assert np.array_equal(again.predict_ppa(x), model.predict_ppa(x))
+
+    # save / load round-trip under <root>/model/cost/
+    root = str(tmp_path / "store")
+    cm.save_cost_model(model, root)
+    back = cm.load_cost_model(root)
+    assert np.allclose(back.cost_w, model.cost_w)
+    assert np.allclose(back.predict_ppa(x), model.predict_ppa(x),
+                       rtol=1e-6)
+    assert np.allclose(back.predict_episodes(ctx), ep, rtol=1e-6)
+    assert back.meta["cells"] == model.meta["cells"]
+    assert cm.load_cost_model(str(tmp_path / "nowhere")) is None
+
+    res = cm.holdout_residuals(index, steps=10, seed=3)
+    assert set(res) == set(model.meta["cells"])
+    assert all(np.isfinite(v) and v >= 0 for v in res.values())
+
+
+def test_with_transfer_fills_priorities_or_degrades_to_weights_only(
+        tmp_path):
+    _fab_campaign(tmp_path / "donor", _spec("donor"))
+    tspec = transfer_mod.with_transfer(_spec("tgt", nodes=[5]),
+                                       [str(tmp_path / "donor")])
+    assert tspec.transfer_from == [os.path.abspath(str(tmp_path / "donor"))]
+    assert set(tspec.priorities) == {b.key for b in plan_cached(tspec)}
+    assert all(isinstance(v, float) and v >= 0
+               for v in tspec.priorities.values())
+    # the armed spec survives the manifest round-trip (resume equality)
+    assert CampaignSpec.from_dict(tspec.to_dict()) == tspec
+
+    # donors whose cells all finished with empty archives: weights-only
+    # transfer — transfer_from recorded, priorities omitted
+    spec_e = _spec("empty")
+    store_e = CampaignStore.create(str(tmp_path / "empty"), spec_e)
+    for cell in cells(spec_e):
+        store_e.complete_cell(cell, dict(cell_id=cell.cell_id,
+                                         ppa_score=1e9,
+                                         episodes=8, wall_s=1.0), [])
+    weak = transfer_mod.with_transfer(_spec("t2", nodes=[5]),
+                                      [str(tmp_path / "empty")])
+    assert weak.transfer_from and weak.priorities is None
+    # a bad root fails fast
+    with pytest.raises(FileNotFoundError):
+        transfer_mod.with_transfer(_spec("t3"), [str(tmp_path / "nope")])
+
+
+# =================================================================== CLI
+def test_cli_transfer_from_validation(tmp_path, capsys):
+    grid = tmp_path / "grid.json"
+    grid.write_text(json.dumps(dict(name="g", workloads=[ARCH], nodes=[3],
+                                    modes=["high_perf"], episodes=8,
+                                    lanes=4, max_envs=4)))
+    with pytest.raises(SystemExit):
+        dse.main(["--campaign", str(grid),
+                  "--transfer-from", str(tmp_path / "nope")])
+    assert "no campaign manifest" in capsys.readouterr().err
+    with pytest.raises(SystemExit):
+        dse.main(["--resume", str(tmp_path),
+                  "--transfer-from", str(tmp_path)])
+    assert "start a new campaign" in capsys.readouterr().err
+
+
+# ======================================================== end to end
+def test_transfer_end_to_end_warm_start(tmp_path):
+    """Real donor campaign -> with_transfer -> warm-started target: the
+    manifest records donors + weights, load_warm_start materializes
+    re-evaluated feasible seeds, and the cost model + eval + scaling
+    report land in the run dirs."""
+    from repro.configs import get_config
+    from repro.workload.extract import extract
+
+    dspec = _spec("donor", episodes=32)
+    donor = run_campaign(str(tmp_path / "donor"), dspec, progress=_silent)
+    assert donor.all_done()
+    # every campaign now writes the scaling report and weights snapshots
+    with open(os.path.join(donor.root, "report", "scaling.json")) as f:
+        scaling = json.load(f)
+    assert set(scaling["cells"]) == {c.cell_id for c in cells(dspec)}
+    assert f"{ARCH}__high_perf" in scaling["fits"]
+    for fit in scaling["fits"].values():
+        assert {"slope", "intercept"} <= set(
+            next(iter(fit["metrics"].values())))
+
+    tspec = transfer_mod.with_transfer(_spec("tgt", nodes=[5]),
+                                       [donor.root])
+    store = run_campaign(str(tmp_path / "tgt"), tspec, progress=_silent)
+    assert store.all_done()
+
+    rec = store.manifest["transfer"]
+    assert rec["roots"] == [os.path.abspath(donor.root)]
+    batch = plan_cached(tspec)[0]
+    assert rec["donors"][batch.key]["cells"][batch.cells[0].cell_id][
+        "cell_id"] == f"{ARCH}__7nm__high_perf"
+    w = rec["donors"][batch.key]["weights"]
+    assert w and os.path.isdir(w["dir"])
+    assert rec["cost_model"]["n_rows"] > 0
+
+    # the warm seed the batch actually ran with: donor weights + the
+    # donor frontier re-evaluated under the target cell, episode 0
+    wl = extract(get_config(ARCH), seq_len=tspec.seq_len,
+                 batch=tspec.batch)
+    ws = transfer_mod.load_warm_start(store, batch, wl)
+    assert ws is not None and ws["flat"]
+    assert any(k.startswith("sac/") for k in ws["flat"])
+    seeded = [c for c in ws["cells"] if c]
+    assert seeded
+    for c in seeded:
+        assert all(e.episode == 0 for e in c["entries"])
+        score, cfg, metrics = c["best"]
+        assert score == min(e.ppa_score for e in c["entries"])
+        assert cfg.shape == (cs.DIM,) and len(metrics) == M_DIM
+
+    # persistent artifacts on the target root
+    assert cm.load_cost_model(store.root) is not None
+    assert os.path.isfile(os.path.join(store.model_dir(), "eval.json"))
+    assert os.path.isfile(os.path.join(store.root, "report",
+                                       "scaling.json"))
