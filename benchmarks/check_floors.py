@@ -26,6 +26,10 @@ enforces the committed floors:
   * ``bench_transfer.json``       episodes_ratio     <= 0.7x
     (warm-started cell reaches the cold run's best PPA in at most 0.7x
     the episodes; see benchmarks.bench_transfer)
+  * ``bench_scenarios.json``      phase_ppa_distinct, fp8_bytes_halved,
+    moe_nodes_linear, phase_adapt_distinct (phase-split scenario engine:
+    prefill/decode separation, fp8 datapath, grouped MoE graphs, and
+    per-phase RL adaptation; see benchmarks.bench_scenarios)
 
 Exit 0 iff every present table passes and none is missing.  CI runs this
 after the benchmark smoke job so the perf trajectory is regression-gated
@@ -74,6 +78,10 @@ FLOORS = {
     "bench_obs.json": [("overhead_pct", 5.0, "max")],
     "bench_multidev.json": [("speedup", _multidev_floor, "min")],
     "bench_transfer.json": [("episodes_ratio", 0.7, "max")],
+    "bench_scenarios.json": [("phase_ppa_distinct", True, "bool"),
+                             ("fp8_bytes_halved", True, "bool"),
+                             ("moe_nodes_linear", True, "bool"),
+                             ("phase_adapt_distinct", True, "bool")],
 }
 
 

@@ -13,8 +13,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_campaign, bench_fleet,
-                            bench_gated_campaign, bench_obs, bench_serve,
-                            bench_vec_env, roofline, tables)
+                            bench_gated_campaign, bench_obs, bench_scenarios,
+                            bench_serve, bench_vec_env, roofline, tables)
     from benchmarks.common import BENCH_EPISODES, emit
 
     print(f"# repro benchmarks (episodes/node={BENCH_EPISODES})")
@@ -37,6 +37,7 @@ def main() -> None:
         ("fleet", bench_fleet.bench_rows),
         ("serve", bench_serve.bench_rows),
         ("obs", bench_obs.bench_rows),
+        ("scenarios", bench_scenarios.bench_rows),
     ]
     failures = 0
     t_start = time.time()

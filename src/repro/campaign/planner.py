@@ -16,20 +16,36 @@ from typing import Dict, List, Optional, Sequence
 from repro.configs.base import ARCH_IDS
 from repro.ppa.nodes import NODES
 from repro.ppa.surrogate import TAU_SUR_DEFAULT
+from repro.workload.extract import DTYPES, PHASES
 
 MODES = ("high_perf", "low_power")
+# default scenario point: ids/keys carry NO suffix here, so pre-scenario
+# campaign directories, checkpoints and fingerprints stay byte-identical
+DEFAULT_DTYPE = "native"
+DEFAULT_PHASE = "decode"
+
+
+def scenario_suffix(dtype: str, phase: str) -> str:
+    """``"__{dtype}-{phase}"`` for non-default scenarios, ``""`` at the
+    default — the back-compat rule every id/key below follows."""
+    if dtype == DEFAULT_DTYPE and phase == DEFAULT_PHASE:
+        return ""
+    return f"__{dtype}-{phase}"
 
 
 @dataclasses.dataclass(frozen=True)
 class Cell:
-    """One (workload, node, mode) point of the campaign grid."""
+    """One (workload, node, mode[, dtype, phase]) point of the grid."""
     arch: str
     node_nm: int
     mode: str                    # 'high_perf' | 'low_power'
+    dtype: str = DEFAULT_DTYPE   # 'native' | 'fp8' | 'int8'
+    phase: str = DEFAULT_PHASE   # 'decode' | 'prefill'
 
     @property
     def cell_id(self) -> str:
-        return f"{self.arch}__{self.node_nm}nm__{self.mode}"
+        return (f"{self.arch}__{self.node_nm}nm__{self.mode}"
+                f"{scenario_suffix(self.dtype, self.phase)}")
 
     @property
     def high_perf(self) -> bool:
@@ -39,19 +55,24 @@ class Cell:
 @dataclasses.dataclass(frozen=True)
 class CellBatch:
     """Cells that run as one mixed-node ``run_search_cells`` invocation.
-    All cells share (arch, mode); ``batch_id`` keys checkpoints."""
+    All cells share (arch, mode, dtype, phase); ``batch_id`` keys
+    checkpoints."""
     index: int
     arch: str
     mode: str
     node_nms: tuple
+    dtype: str = DEFAULT_DTYPE
+    phase: str = DEFAULT_PHASE
 
     @property
     def key(self) -> str:
-        """Index-free content key (arch, mode, nodes): what transfer
-        priorities and warm-start donor records are keyed on — stable
-        across re-packs, unlike ``batch_id`` which embeds the index."""
+        """Index-free content key (arch, mode, nodes, scenario): what
+        transfer priorities and warm-start donor records are keyed on —
+        stable across re-packs, unlike ``batch_id`` which embeds the
+        index."""
         nodes = "-".join(str(n) for n in self.node_nms)
-        return f"{self.arch}__{self.mode}__{nodes}nm"
+        return (f"{self.arch}__{self.mode}__{nodes}nm"
+                f"{scenario_suffix(self.dtype, self.phase)}")
 
     @property
     def batch_id(self) -> str:
@@ -59,7 +80,8 @@ class CellBatch:
 
     @property
     def cells(self) -> List[Cell]:
-        return [Cell(self.arch, n, self.mode) for n in self.node_nms]
+        return [Cell(self.arch, n, self.mode, self.dtype, self.phase)
+                for n in self.node_nms]
 
 
 @dataclasses.dataclass
@@ -109,6 +131,19 @@ class CampaignSpec:
     # workers drain together; index assignment (and with it per-batch
     # seeds) stays spec-order-derived.
     priorities: Optional[Dict[str, float]] = None
+    # scenario axes (see ROADMAP "Scenario engine"): each (dtype, phase)
+    # pair multiplies the grid.  The defaults reproduce the pre-scenario
+    # grid exactly — cell ids carry no suffix and plans/seeds/fingerprints
+    # are byte-identical.
+    dtypes: List[str] = dataclasses.field(
+        default_factory=lambda: [DEFAULT_DTYPE])
+    phases: List[str] = dataclasses.field(
+        default_factory=lambda: [DEFAULT_PHASE])
+    # serving SLO targets: None disables SLO-aware selection; a flat
+    # {"ttft_ms": .., "tok_s": ..} applies to every mode; a per-mode
+    # {"high_perf": {...}, "low_power": {...}} overrides per mode
+    # (missing keys fall back to repro.core.reward.DEFAULT_SLOS).
+    slo: Optional[Dict] = None
 
     def __post_init__(self) -> None:
         unknown = [w for w in self.workloads if w not in ARCH_IDS]
@@ -152,10 +187,38 @@ class CampaignSpec:
                        for v in self.priorities.values())):
             raise ValueError(f"priorities must map batch keys to numbers "
                              f"(got {self.priorities!r})")
+        bad_dt = [d for d in self.dtypes if d not in DTYPES]
+        if bad_dt or not self.dtypes:
+            raise ValueError(f"unknown dtypes {bad_dt or self.dtypes}; "
+                             f"known: {list(DTYPES)}")
+        bad_ph = [p for p in self.phases if p not in PHASES]
+        if bad_ph or not self.phases:
+            raise ValueError(f"unknown phases {bad_ph or self.phases}; "
+                             f"known: {list(PHASES)}")
+        if self.slo is not None:
+            if not isinstance(self.slo, dict) or not self.slo:
+                raise ValueError(f"slo must be a non-empty dict "
+                                 f"(got {self.slo!r})")
+            per_mode = all(isinstance(v, dict) for v in self.slo.values())
+            groups = self.slo.values() if per_mode else [self.slo]
+            if per_mode:
+                bad = sorted(set(self.slo) - set(MODES))
+                if bad:
+                    raise ValueError(f"per-mode slo keys {bad} unknown; "
+                                     f"modes: {list(MODES)}")
+            for g in groups:
+                bad = sorted(set(g) - {"ttft_ms", "tok_s"})
+                if bad or any(not isinstance(v, (int, float))
+                              or isinstance(v, bool) or v <= 0
+                              for v in g.values()):
+                    raise ValueError(
+                        f"slo targets must be positive numbers keyed "
+                        f"'ttft_ms'/'tok_s' (got {g!r})")
 
     @property
     def n_cells(self) -> int:
-        return len(self.workloads) * len(self.nodes) * len(self.modes)
+        return (len(self.workloads) * len(self.nodes) * len(self.modes)
+                * len(self.dtypes) * len(self.phases))
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -206,17 +269,20 @@ class CampaignSpec:
 
 
 def cells(spec: CampaignSpec) -> List[Cell]:
-    """Expand the grid: workloads (outer) x modes x nodes (inner)."""
-    return [Cell(w, n, m) for w in spec.workloads for m in spec.modes
-            for n in spec.nodes]
+    """Expand the grid: workloads (outer) x dtypes x phases x modes x
+    nodes (inner).  With the default single-point scenario axes this is
+    exactly the pre-scenario expansion."""
+    return [Cell(w, n, m, dt, ph)
+            for w in spec.workloads for dt in spec.dtypes
+            for ph in spec.phases for m in spec.modes for n in spec.nodes]
 
 
 def plan(spec: CampaignSpec) -> List[CellBatch]:
     """Pack the grid into mixed-node batches of <= max_envs environments.
 
-    Grouping key is (workload, mode) — those fix the env's workload vector
-    and reward weights — and the node list is chunked so that
-    ``len(chunk) * lanes <= max_envs``.
+    Grouping key is (workload, dtype, phase, mode) — those fix the env's
+    workload vector and reward weights — and the node list is chunked so
+    that ``len(chunk) * lanes <= max_envs``.
 
     With ``spec.priorities`` set (a fitted cost model's predicted episodes
     per ``CellBatch.key``), the returned list is ordered by DESCENDING
@@ -230,11 +296,15 @@ def plan(spec: CampaignSpec) -> List[CellBatch]:
     per_batch = max(1, spec.max_envs // spec.lanes)
     out: List[CellBatch] = []
     for w in spec.workloads:
-        for m in spec.modes:
-            nodes: Sequence[int] = spec.nodes
-            for i in range(0, len(nodes), per_batch):
-                out.append(CellBatch(index=len(out), arch=w, mode=m,
-                                     node_nms=tuple(nodes[i:i + per_batch])))
+        for dt in spec.dtypes:
+            for ph in spec.phases:
+                for m in spec.modes:
+                    nodes: Sequence[int] = spec.nodes
+                    for i in range(0, len(nodes), per_batch):
+                        out.append(CellBatch(
+                            index=len(out), arch=w, mode=m,
+                            node_nms=tuple(nodes[i:i + per_batch]),
+                            dtype=dt, phase=ph))
     if spec.priorities:
         pr = spec.priorities
         out = sorted(out, key=lambda b: (-float(pr.get(b.key, 0.0)),

@@ -57,22 +57,30 @@ def markdown_table(rows: Sequence[Dict], cols: Sequence[str]) -> str:
 
 
 def cell_rows(store) -> List[Dict]:
-    """Per-cell best-PPA table, sorted by (arch, mode, node)."""
+    """Per-cell best-PPA table, sorted by (arch, scenario, mode, node)."""
     rows = list(store.summaries().values())
-    rows.sort(key=lambda r: (r.get("arch", ""), r.get("mode", ""),
+    rows.sort(key=lambda r: (r.get("arch", ""), r.get("dtype", "native"),
+                             r.get("phase", "decode"), r.get("mode", ""),
                              r.get("node_nm", 0)))
     return rows
 
 
 def adaptation_tables(store) -> Dict[str, List[Dict]]:
-    """Cross-node adaptation: {"<arch>__<mode>": [per-node rows]}.
+    """Cross-node adaptation: {"<arch>__<mode>[__<dtype>-<phase>]":
+    [per-node rows]}.
 
     Each row is the converged design for one process node — reading down a
     column (mesh, FETCH, VLEN, memory split) shows how the single RL loop
-    retunes the architecture across nodes without manual intervention."""
+    retunes the architecture across nodes without manual intervention.
+    Off-default scenario cells get their own group (suffixed key), so a
+    dtype x phase grid reads as side-by-side adaptation tables — the
+    per-axis re-tuning evidence."""
+    from repro.campaign.planner import scenario_suffix
     out: Dict[str, List[Dict]] = {}
     for row in cell_rows(store):
-        key = f"{row.get('arch')}__{row.get('mode')}"
+        key = (f"{row.get('arch')}__{row.get('mode')}"
+               + scenario_suffix(row.get("dtype", "native"),
+                                 row.get("phase", "decode")))
         out.setdefault(key, []).append(
             {c: row.get(c) for c in ADAPT_COLS})
     for rows in out.values():
@@ -158,7 +166,9 @@ def scaling_fits(store) -> Dict:
     data, JSON-safe)."""
     import numpy as np
 
-    from repro.launch.recommend import MODE_WEIGHTS, split_cell_id
+    from repro.campaign.planner import scenario_suffix
+    from repro.launch.recommend import (MODE_WEIGHTS, split_cell_id,
+                                        split_scenario)
     groups: Dict = {}
     cells: Dict[str, Dict] = {}
     for cid in sorted(store.manifest["cells"]):
@@ -166,13 +176,14 @@ def scaling_fits(store) -> Dict:
         if not len(ar):
             continue
         arch, node_nm, mode = split_cell_id(cid)
+        _, dt, ph = split_scenario(cid)
         cells[cid] = {k: np.asarray(v, np.float64).tolist()
                       for k, v in ar.frontier().items()}
         e = ar.select(*MODE_WEIGHTS.get(mode, MODE_WEIGHTS["high_perf"]))
         if e is not None:
-            groups.setdefault((arch, mode), []).append((node_nm, e))
+            groups.setdefault((arch, mode, dt, ph), []).append((node_nm, e))
     fits: Dict[str, Dict] = {}
-    for (arch, mode), pts in sorted(groups.items()):
+    for (arch, mode, dt, ph), pts in sorted(groups.items()):
         pts.sort(key=lambda p: p[0])
         nodes = [p[0] for p in pts]
         if len(set(nodes)) < 2:
@@ -189,7 +200,8 @@ def scaling_fits(store) -> Dict:
                                  intercept=round(float(intercept), 6),
                                  mean_sq_residual=round(resid, 8),
                                  values=vals.tolist())
-        fits[f"{arch}__{mode}"] = dict(nodes=nodes, metrics=metrics)
+        fits[f"{arch}__{mode}{scenario_suffix(dt, ph)}"] = \
+            dict(nodes=nodes, metrics=metrics)
     return dict(fits=fits, cells=cells)
 
 

@@ -19,7 +19,8 @@ import os
 import time
 from typing import Callable, Dict, List, Optional
 
-from repro.campaign.planner import (CampaignSpec, Cell, CellBatch, plan,
+from repro.campaign.planner import (DEFAULT_DTYPE, DEFAULT_PHASE,
+                                    CampaignSpec, Cell, CellBatch, plan,
                                     plan_cached)
 from repro.campaign.report import write_reports
 from repro.campaign.store import CampaignStore
@@ -59,6 +60,12 @@ def cell_summary(cell: Cell, res: SearchResult) -> Dict:
         # no feasible design found: None (not inf) keeps every campaign
         # artifact strict JSON
         row.update(ppa_score=None)
+    # scenario keys appear ONLY off the default point / under an SLO, so
+    # default-scenario summaries (and their fingerprints) are byte-stable
+    if cell.dtype != DEFAULT_DTYPE or cell.phase != DEFAULT_PHASE:
+        row.update(dtype=cell.dtype, phase=cell.phase)
+    if res.ttft_ms is not None:
+        row.update(ttft_ms=res.ttft_ms, slo_ok=res.slo_ok)
     return row
 
 
@@ -93,7 +100,22 @@ def run_batch(store: CampaignStore, batch: CellBatch,
         checkpoint_dir=store.ckpt_dir(batch.batch_id),
         checkpoint_every=spec.checkpoint_every, resume=True,
         devices=spec.devices, warm_start=warm,
-        save_weights_to=store.weights_dir(batch.batch_id))
+        save_weights_to=store.weights_dir(batch.batch_id),
+        scenario=batch_scenario(batch, spec))
+
+
+def batch_scenario(batch: CellBatch, spec: CampaignSpec) -> Optional[Dict]:
+    """SLO-aware selection payload for ``run_search_cells`` (None when the
+    spec carries no SLO, which keeps the search byte-identical): the
+    paired prefill workload supplies TTFT, the cell's own search supplies
+    tokens/s, and the per-mode SLO targets come from the spec."""
+    if spec.slo is None:
+        return None
+    from repro.core.reward import resolve_slo
+    aux = extract(get_config(batch.arch), seq_len=spec.seq_len,
+                  batch=spec.batch, phase="prefill", dtype=batch.dtype)
+    return dict(aux_wl=aux, slo=resolve_slo(spec.slo, batch.mode),
+                seq_len=spec.seq_len, batch=spec.batch)
 
 
 def _resumed_spec(store: CampaignStore, root: str,
@@ -123,7 +145,7 @@ def execute_batch(store: CampaignStore, batch: CellBatch,
         store.clear_ckpt(batch.batch_id)
         return 0
     wl = extract(get_config(batch.arch), seq_len=spec.seq_len,
-                 batch=spec.batch)
+                 batch=spec.batch, phase=batch.phase, dtype=batch.dtype)
     progress(f"[campaign] {batch.batch_id}: {len(batch.node_nms)} cells "
              f"x {spec.lanes} lanes, {spec.episodes} ep/cell")
     if log is not None:
@@ -226,7 +248,7 @@ def run_cells_sequential(spec: CampaignSpec,
     out = []
     for batch in (batches or plan(spec)):
         wl = extract(get_config(batch.arch), seq_len=spec.seq_len,
-                     batch=spec.batch)
+                     batch=spec.batch, phase=batch.phase, dtype=batch.dtype)
         for i, node in enumerate(batch.node_nms):
             sc = SearchConfig(episodes=spec.episodes,
                               seed=spec.seed + 1000 * batch.index + i,
@@ -236,5 +258,6 @@ def run_cells_sequential(spec: CampaignSpec,
             out.extend(run_search_cells(
                 wl, [node], high_perf=batch.mode == "high_perf",
                 search=sc, lanes_per_cell=spec.lanes,
-                devices=spec.devices))
+                devices=spec.devices,
+                scenario=batch_scenario(batch, spec)))
     return out

@@ -156,3 +156,52 @@ def reward_step(metrics: jnp.ndarray, ranges: jnp.ndarray, node: jnp.ndarray,
                  b_feas=b_feas, p_viol=p_viol, p_mem=p_mem, p_haz=p_haz,
                  reward=r)
     return r, new_ranges, parts
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware phase combination (scenario engine).
+#
+# A serving scenario pairs the decode-phase search workload with a prefill
+# evaluation of the same design: TTFT comes from prefill throughput,
+# steady-state tokens/s from decode (distinct roofline regimes, see
+# ROADMAP "Scenario engine").  Targets are per-mode; the combined objective
+# prefers SLO-feasible candidates and hinge-penalises misses, so when no
+# archive entry meets the SLO the least-violating design still wins.
+
+DEFAULT_SLOS = {
+    "high_perf": {"ttft_ms": 500.0, "tok_s": 30.0},
+    "low_power": {"ttft_ms": 2000.0, "tok_s": 10.0},
+}
+
+
+def resolve_slo(slo_spec, mode: str) -> Dict[str, float]:
+    """Normalise a campaign ``slo`` spec to ``{'ttft_ms', 'tok_s'}``.
+
+    Accepts ``None``/``{}`` (per-mode defaults), a flat
+    ``{"ttft_ms": ..., "tok_s": ...}`` applied to every mode, or a
+    per-mode mapping ``{"high_perf": {...}, "low_power": {...}}``."""
+    base = dict(DEFAULT_SLOS.get(mode, DEFAULT_SLOS["high_perf"]))
+    if slo_spec:
+        if any(k in DEFAULT_SLOS for k in slo_spec):
+            base.update(slo_spec.get(mode) or {})
+        else:
+            base.update(slo_spec)
+    return {k: float(v) for k, v in base.items()}
+
+
+def ttft_ms(prefill_tok_s: float, seq_len: float, batch: float) -> float:
+    """Time-to-first-token: the prompt's seq_len*batch tokens pushed
+    through the design's prefill-phase throughput."""
+    return 1e3 * seq_len * batch / max(float(prefill_tok_s), 1e-9)
+
+
+def slo_objective(ppa_score: float, tok_s: float, ttft: float,
+                  slo: Dict[str, float]) -> float:
+    """Combined selection objective (lower = better): the decode-phase
+    ppa_score plus hinge penalties for missing either SLO target."""
+    miss = 0.0
+    if slo.get("tok_s"):
+        miss += max(0.0, 1.0 - tok_s / slo["tok_s"])
+    if slo.get("ttft_ms"):
+        miss += max(0.0, ttft / slo["ttft_ms"] - 1.0)
+    return float(ppa_score) + miss

@@ -33,7 +33,7 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.ppa import config_space as cs
 from repro.ppa import surrogate as sur_mod
-from repro.ppa.analytic import M_DIM, M_IDX, evaluate_vec_jit
+from repro.ppa.analytic import M_DIM, M_IDX, evaluate_batch, evaluate_vec_jit
 from repro.workload.features import Workload
 
 
@@ -100,6 +100,11 @@ class SearchResult:
     gate_open_episode: Optional[int] = None
     screened: int = 0
     evaluated: int = 0
+    # SLO-aware scenario selection (set only when run_search_cells got a
+    # ``scenario``): prefill-phase TTFT of the chosen design and whether it
+    # met both SLO targets.
+    ttft_ms: Optional[float] = None
+    slo_ok: Optional[bool] = None
 
     def metric(self, name: str) -> float:
         if self.best_metrics is None:
@@ -280,7 +285,8 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
                      resume: bool = False,
                      devices: Optional[int] = None,
                      warm_start: Optional[Dict] = None,
-                     save_weights_to: Optional[str] = None
+                     save_weights_to: Optional[str] = None,
+                     scenario: Optional[Dict] = None
                      ) -> List[SearchResult]:
     """Algorithm 1 on the batched engine over a mixed-node *cell batch*.
 
@@ -346,6 +352,16 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
     ``save_weights_to``: after the final dispatch, snapshot the final
     SAC + surrogate parameters there (atomic, ``keep=1``) so a later
     campaign can warm-start from this batch.
+
+    ``scenario`` (SLO-aware phase combination): a dict with ``aux_wl``
+    (the prefill-phase :class:`Workload` paired with the decode search
+    workload), ``slo`` (resolved ``{"ttft_ms", "tok_s"}`` targets),
+    ``seq_len`` and ``batch``.  Final selection then minimises
+    ``reward.slo_objective`` over the Pareto archive — TTFT from the
+    prefill evaluation, tokens/s from decode — instead of the plain
+    scalarisation, and the returned results carry ``ttft_ms``/``slo_ok``.
+    Strictly post-loop: ``scenario=None`` is byte-identical to the
+    pre-scenario engine.
     """
     sc = search or SearchConfig()
     n_cells = len(node_nms)
@@ -751,6 +767,33 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
     for c, node_nm in enumerate(node_nms):
         sel = archives[c].select(env.w_perf, env.w_power, env.w_area)
         best_cfg = sel.cfg if sel is not None else best[c][1]
+        ttft = slo_ok = None
+        # SLO-aware scenario selection: re-evaluate the cell's Pareto
+        # archive under the paired prefill workload and pick the entry
+        # minimising the combined objective (decode ppa_score + SLO hinge
+        # penalties, repro.core.reward.slo_objective).  Runs strictly after
+        # the search loop, so checkpoints and the scenario=None path are
+        # untouched.
+        if scenario is not None and archives[c].entries:
+            from repro.core import reward as rwd
+            ents = archives[c].entries
+            pre = np.asarray(evaluate_batch(
+                cs.project(jnp.asarray(np.stack([e.cfg for e in ents]),
+                                       jnp.float32)),
+                jnp.asarray(scenario["aux_wl"].features),
+                env.node_mat[c * lanes]))
+            slo = scenario["slo"]
+            ttfts = [rwd.ttft_ms(pre[i, M_IDX["tok_s"]],
+                                 scenario["seq_len"], scenario["batch"])
+                     for i in range(len(ents))]
+            objs = [rwd.slo_objective(e.ppa_score, e.tok_s, t, slo)
+                    for e, t in zip(ents, ttfts)]
+            pick = int(np.argmin(objs))
+            best_cfg = ents[pick].cfg
+            ttft = float(ttfts[pick])
+            slo_ok = bool(
+                (not slo.get("tok_s") or ents[pick].tok_s >= slo["tok_s"])
+                and (not slo.get("ttft_ms") or ttft <= slo["ttft_ms"]))
         best_metrics = None
         hetero = None
         if best_cfg is not None:
@@ -771,7 +814,8 @@ def run_search_cells(workload: Workload, node_nms: Sequence[int], *,
             gate_open_episode=(int(gate.open_at[c])
                                if gate.open_at[c] >= 0 else None),
             screened=int(gate.screened[c]),
-            evaluated=int(gate.evaluated[c])))
+            evaluated=int(gate.evaluated[c]),
+            ttft_ms=ttft, slo_ok=slo_ok))
     return results
 
 

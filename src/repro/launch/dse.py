@@ -33,7 +33,7 @@ from repro.core.search import (SearchConfig, SearchResult, run_grid,
                                run_random, run_sac, run_search)
 from repro.ppa.analytic import M_IDX
 from repro.ppa.nodes import NODES
-from repro.workload.extract import extract
+from repro.workload.extract import DTYPES, PHASES, extract
 
 
 def result_row(res: SearchResult) -> Dict:
@@ -60,10 +60,11 @@ def run(arch: str, *, nodes: List[int], mode: str, episodes: int,
         engine: str = "scalar", n_envs: int = 64,
         surrogate_gate: bool = True, screen_k: Optional[int] = None,
         gate_threshold: Optional[float] = None,
-        devices: Optional[int] = None) -> List[Dict]:
+        devices: Optional[int] = None, phase: str = "decode",
+        dtype: str = "native") -> List[Dict]:
     cfg = get_config(arch)
     high_perf = mode == "high-performance"
-    wl = extract(cfg, seq_len=seq_len, batch=batch)
+    wl = extract(cfg, seq_len=seq_len, batch=batch, phase=phase, dtype=dtype)
     os.makedirs(out_dir, exist_ok=True)
     # None = SearchConfig's defaults own the gate settings
     gate_kw = dict(surrogate_gate=surrogate_gate)
@@ -216,6 +217,13 @@ def validate_args(ap: argparse.ArgumentParser,
     if a.launch_template is not None and "{host}" in a.launch_template \
             and a.hosts is None:
         ap.error("--launch-template references {host}; pass --hosts too")
+    scen_flags = [n for n, v, d in (("--phase", a.phase, "decode"),
+                                    ("--dtype", a.dtype, "native"))
+                  if v != d]
+    if scen_flags and (a.campaign or a.resume):
+        ap.error(f"{'/'.join(scen_flags)} select the single-search "
+                 "scenario; campaign grids sweep these as 'phases'/"
+                 "'dtypes' axes in the spec file")
     if a.campaign and a.resume:
         ap.error("--campaign starts a new run and --resume continues an "
                  "existing one; pass exactly one")
@@ -250,6 +258,15 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--seq-len", type=int, default=2048)
     ap.add_argument("--batch", type=int, default=3)
+    ap.add_argument("--phase", default="decode", choices=list(PHASES),
+                    help="inference phase to extract the workload for: "
+                         "'decode' is the per-token steady state, 'prefill' "
+                         "the seq-parallel prompt pass (campaign grids take "
+                         "a 'phases' list in the spec instead)")
+    ap.add_argument("--dtype", default="native", choices=list(DTYPES),
+                    help="datapath dtype override: 'fp8'/'int8' re-extract "
+                         "the workload at a 1-byte weight format (campaign "
+                         "grids take a 'dtypes' list in the spec instead)")
     ap.add_argument("--update-every", type=int, default=1)
     ap.add_argument("--engine", default="scalar", choices=["scalar", "vec"],
                     help="'vec' runs the batched VecDSEEnv engine: n-envs "
@@ -393,7 +410,7 @@ def main(argv: Optional[List[str]] = None) -> None:
         engine=a.engine, n_envs=a.n_envs,
         surrogate_gate=not a.no_surrogate_gate,
         screen_k=a.screen_k, gate_threshold=a.gate_threshold,
-        devices=devices)
+        devices=devices, phase=a.phase, dtype=a.dtype)
 
 
 if __name__ == "__main__":

@@ -37,12 +37,14 @@ import argparse
 import dataclasses
 import json
 import math
+import re
 import sys
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.campaign.planner import MODES
+from repro.campaign.planner import (DEFAULT_DTYPE, DEFAULT_PHASE, MODES,
+                                    scenario_suffix)
 from repro.campaign.store import CampaignStore
 from repro.configs import ARCH_IDS, get_config
 from repro.core.pareto import ArchiveEntry, ParetoArchive
@@ -50,7 +52,7 @@ from repro.ppa import config_space as cs
 from repro.ppa import surrogate as sur_mod
 from repro.ppa.analytic import NODE_DIM, node_vector
 from repro.ppa.nodes import NODES, node_params
-from repro.workload.extract import extract
+from repro.workload.extract import DTYPES, PHASES, extract
 from repro.workload.features import WL_DIM, as_feature_vector
 
 # PPA weight profiles per mode (paper §5.4; must match DSEEnv/VecDSEEnv so
@@ -77,9 +79,29 @@ def _log1p(v: np.ndarray) -> np.ndarray:
                     ).astype(np.float32)
 
 
+# the optional scenario suffix's last ``__`` segment: unambiguous against
+# arch names containing ``__`` because modes are only high_perf/low_power
+_SCENARIO_SEG = re.compile(r"^(native|fp8|int8)-(decode|prefill)$")
+
+
+def split_scenario(cell_id: str) -> Tuple[str, str, str]:
+    """``<base>[__<dtype>-<phase>]`` -> (base_cell_id, dtype, phase).
+
+    Default-scenario cells carry no suffix (the back-compat rule of
+    ``repro.campaign.planner.scenario_suffix``), so they come back as
+    (cell_id, 'native', 'decode')."""
+    head, _, last = cell_id.rpartition("__")
+    m = _SCENARIO_SEG.match(last) if head else None
+    if m:
+        return head, m.group(1), m.group(2)
+    return cell_id, DEFAULT_DTYPE, DEFAULT_PHASE
+
+
 def split_cell_id(cell_id: str) -> Tuple[str, int, int]:
-    """``<arch>__<node>nm__<mode>`` -> (arch, node_nm, mode)."""
-    arch, node_s, mode = cell_id.rsplit("__", 2)
+    """``<arch>__<node>nm__<mode>[__<dtype>-<phase>]`` ->
+    (arch, node_nm, mode); use :func:`split_scenario` for the axes."""
+    base, _, _ = split_scenario(cell_id)
+    arch, node_s, mode = base.rsplit("__", 2)
     return arch, int(node_s[:-2]), mode
 
 
@@ -104,6 +126,13 @@ class Query:
     w_perf: Optional[float] = None
     w_power: Optional[float] = None
     w_area: Optional[float] = None
+    # scenario axes: answered from the matching suffixed cell (exact) or
+    # phase/dtype-aware extraction (surrogate fallback)
+    phase: str = DEFAULT_PHASE
+    dtype: str = DEFAULT_DTYPE
+    # TTFT SLO cap in ms: prefill-phase archive answers only — converted
+    # to a min prompt-throughput floor at the index's extraction settings
+    max_ttft_ms: Optional[float] = None
 
     def __post_init__(self) -> None:
         if (self.arch is None) == (self.features is None):
@@ -120,6 +149,14 @@ class Query:
             raise ValueError(f"unknown mode {self.mode!r}; known: {MODES}")
         if not self.power_budget_mw > 0:
             raise ValueError("power_budget_mw must be > 0")
+        if self.phase not in PHASES:
+            raise ValueError(f"unknown phase {self.phase!r}; "
+                             f"known: {list(PHASES)}")
+        if self.dtype not in DTYPES:
+            raise ValueError(f"unknown dtype {self.dtype!r}; "
+                             f"known: {list(DTYPES)}")
+        if self.max_ttft_ms is not None and not self.max_ttft_ms > 0:
+            raise ValueError("max_ttft_ms must be > 0")
 
     @property
     def weights(self) -> Tuple[float, float, float]:
@@ -201,7 +238,11 @@ class ArchiveIndex:
             raise ValueError(
                 "archive index holds no frontier points; run (and "
                 "reconcile) a campaign first")
-        self._wl_cache: Dict[str, np.ndarray] = {}
+        # keyed on the FULL extraction settings, not arch alone: multi-root
+        # indexes (and scenario cells) answer with differing
+        # (seq_len, batch, phase, dtype) and must not alias
+        self._wl_cache: Dict[Tuple[str, int, int, str, str],
+                             np.ndarray] = {}
         self._node_cache: Dict[Tuple[int, str], np.ndarray] = {}
 
     @classmethod
@@ -215,14 +256,16 @@ class ArchiveIndex:
                    batch=int(spec.get("batch", 3)))
 
     # ------------------------------------------------------------- contexts
-    def wl_features(self, arch: str) -> np.ndarray:
+    def wl_features(self, arch: str, phase: str = DEFAULT_PHASE,
+                    dtype: str = DEFAULT_DTYPE) -> np.ndarray:
         """Workload features for a zoo arch at the index's extraction
         settings (cached: extraction walks the operator graph)."""
-        if arch not in self._wl_cache:
-            self._wl_cache[arch] = extract(
+        key = (arch, self.seq_len, self.batch, phase, dtype)
+        if key not in self._wl_cache:
+            self._wl_cache[key] = extract(
                 get_config(arch), seq_len=self.seq_len,
-                batch=self.batch).features
-        return self._wl_cache[arch]
+                batch=self.batch, phase=phase, dtype=dtype).features
+        return self._wl_cache[key]
 
     def node_ctx(self, node_nm: int, mode: str) -> np.ndarray:
         """(NODE_DIM,) log1p node half of the serving context (cached —
@@ -249,7 +292,9 @@ class ArchiveIndex:
         xs, ys = [], []
         for cid in sorted(self.cells):
             arch, node_nm, mode = split_cell_id(cid)
-            ctx = self.query_context(self.wl_features(arch), node_nm, mode)
+            _, dt, ph = split_scenario(cid)
+            ctx = self.query_context(self.wl_features(arch, ph, dt),
+                                     node_nm, mode)
             for e in self.cells[cid].entries:
                 xs.append(np.concatenate([ctx, _log1p(e.cfg)]))
                 ys.append(np.log1p(np.maximum(
@@ -297,14 +342,21 @@ class Recommender:
         out-of-grid (unknown cell, or budgets no archived point meets)."""
         if q.arch is None:
             return None
-        cid = f"{q.arch}__{q.node_nm}nm__{q.mode}"
+        cid = (f"{q.arch}__{q.node_nm}nm__{q.mode}"
+               f"{scenario_suffix(q.dtype, q.phase)}")
         ar = self.index.cells.get(cid)
         if ar is None:
             return None
+        min_tok = q.min_tok_s
+        if q.max_ttft_ms is not None and q.phase == "prefill":
+            # a prefill cell's tok_s is prompt throughput, so a TTFT cap
+            # is exactly a floor on it at the index's prompt size
+            min_tok = max(min_tok, 1e3 * self.index.seq_len
+                          * self.index.batch / q.max_ttft_ms)
         entries = [e for e in ar.entries
                    if e.power_mw <= q.power_budget_mw
                    and e.perf_gops >= q.min_perf_gops
-                   and e.tok_s >= q.min_tok_s]
+                   and e.tok_s >= min_tok]
         if not entries:
             return None
         if len(entries) == len(ar.entries):
@@ -344,7 +396,8 @@ class Recommender:
             qs = [queries[i] for i in pend]
             feats = np.stack(
                 [q.features if q.features is not None
-                 else self.index.wl_features(q.arch) for q in qs])
+                 else self.index.wl_features(q.arch, q.phase, q.dtype)
+                 for q in qs])
             fl = np.log1p(np.maximum(feats, np.float32(0.0)))
             nodes = np.stack([self.index.node_ctx(q.node_nm, q.mode)
                               for q in qs])
@@ -381,7 +434,9 @@ def _queries_from_args(a: argparse.Namespace,
     common = dict(node_nm=a.node, mode=a.mode,
                   power_budget_mw=(a.power_budget if a.power_budget
                                    else math.inf),
-                  min_perf_gops=a.min_perf, min_tok_s=a.min_tok_s)
+                  min_perf_gops=a.min_perf, min_tok_s=a.min_tok_s,
+                  phase=a.phase, dtype=a.dtype,
+                  max_ttft_ms=a.max_ttft_ms)
     if a.batch:
         out = []
         with open(a.batch) as f:
@@ -424,6 +479,13 @@ def main(argv: Optional[List[str]] = None) -> None:
                     help="min performance in GOPS")
     ap.add_argument("--min-tok-s", type=float, default=0.0,
                     help="min decode tok/s (archive answers only)")
+    ap.add_argument("--phase", default=DEFAULT_PHASE, choices=list(PHASES),
+                    help="scenario phase to answer for (suffixed cells)")
+    ap.add_argument("--dtype", default=DEFAULT_DTYPE, choices=list(DTYPES),
+                    help="scenario datapath dtype to answer for")
+    ap.add_argument("--max-ttft-ms", type=float, default=None,
+                    help="TTFT SLO cap in ms (prefill-phase archive "
+                         "answers only)")
     ap.add_argument("--report", action="store_true",
                     help="also write the archive-index report under the "
                          "primary root's report/ directory")

@@ -66,6 +66,9 @@ M_DIM = len(METRICS)
 #   eta_par = 1 / (1 + ETA_A*hbar + ETA_B*n_cores)
 ETA_A = 1.288e-3
 ETA_B = 4.03e-5
+# expert-routing load imbalance degrades parallel efficiency:
+#   eta_par /= 1 + ETA_IMB * moe_imbalance   (identity for dense workloads)
+ETA_IMB = 0.05
 ALPHA_SPEC = 1.56        # paper §4.13.1: speculative decode ~1.56x
 TM_FP16 = 128            # Eq. 21: tensor-multiplier cap per TCC
 L_HOP_CYC = 2.0          # NoC per-hop latency (cycles), Eq. 19
@@ -103,6 +106,10 @@ def evaluate(cfg: jnp.ndarray, wl: jnp.ndarray, node: jnp.ndarray) -> jnp.ndarra
     noc_latency = hbar * sc_express * L_HOP_CYC + L_SETUP_CYC          # Eq. 19
 
     eta_par = 1.0 / (1.0 + ETA_A * hbar + ETA_B * n_cores)
+    # expert-routing imbalance stalls tiles waiting on the hot expert;
+    # moe_imbalance == 0 (dense / prefill-smoothed) divides by exactly 1.0,
+    # keeping the default scenario bitwise identical
+    eta_par = eta_par / (1.0 + ETA_IMB * _w(wl, "moe_imbalance"))
 
     # ---------------- KV-cache compaction (Eqs. 25-33) --------------------
     kv_bt = _w(wl, "kv_bytes_per_token")                                # Eq. 25
@@ -117,9 +124,12 @@ def evaluate(cfg: jnp.ndarray, wl: jnp.ndarray, node: jnp.ndarray) -> jnp.ndarra
     # ---------------- throughput ceilings (Eqs. 21-24) --------------------
     lanes = jnp.minimum(TM_FP16, _g(cfg, "vlen") / 16.0)                # M_i
     int8_boost = 1.0 + _g(cfg, "precision")      # INT8 mix doubles MACs
+    # real fp8/int8 datapath points on the precision axis: narrow operands
+    # double MAC throughput per lane (1.0 at the native-dtype default)
+    dtype_boost = 1.0 + _w(wl, "dtype_fp8") + _w(wl, "dtype_int8")
     alpha_spec = 1.0 + (ALPHA_SPEC - 1.0) * _w(wl, "spec_decode_ok") * high_perf
     flops_tok = _w(wl, "flops_per_token")
-    macs_capacity = n_cores * lanes * int8_boost * f * eta_par
+    macs_capacity = n_cores * lanes * int8_boost * dtype_boost * f * eta_par
     tok_comp = 2.0 * macs_capacity * alpha_spec / flops_tok             # Eq. 21
 
     batch = jnp.maximum(1.0, _w(wl, "batch"))
@@ -138,7 +148,14 @@ def evaluate(cfg: jnp.ndarray, wl: jnp.ndarray, node: jnp.ndarray) -> jnp.ndarra
     kv_spill_mb = jnp.maximum(0.0, kv_total_mb - kv_dmem_cap_mb)
     spill_frac = kv_spill_mb / jnp.maximum(kv_total_mb, 1e-6)
 
-    bytes_tok = (weight_bytes * prec_shrink / batch
+    # weights actually streamed per step (MoE decode touches only routed
+    # experts; prefill streams the full bank).  Legacy vectors carry 0 here
+    # and fall back to the resident footprint; the default dense scenario
+    # writes weight_traffic_mb by the same expression as weight_mb, so the
+    # select is bitwise transparent.
+    wtraf_bytes = _w(wl, "weight_traffic_mb") * 1e6
+    wtraf_bytes = jnp.where(wtraf_bytes > 0.0, wtraf_bytes, weight_bytes)
+    bytes_tok = (wtraf_bytes * prec_shrink / batch
                  + kv_bt_eff * (1.0 + 3.0 * spill_frac)
                  + _w(wl, "act_bytes_per_token"))                       # Eq. 33
     rom_bw_tile = (_g(cfg, "vlen") / 8.0) * f                           # Eq. 16 BW_pk

@@ -9,6 +9,8 @@ differ from Table 8 while all flop/byte aggregates match analytically).
 """
 from __future__ import annotations
 
+import dataclasses
+import math
 from typing import List, Tuple
 
 import numpy as np
@@ -19,7 +21,30 @@ from repro.workload.features import (KIND_ATTENTION, KIND_CONV, KIND_ELEMWISE,
                                      KIND_ROUTE, KIND_SCAN, WL_IDX, Workload,
                                      WorkloadGraph, wl_vector)
 
-_PREC_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1}
+_PREC_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1,
+               "fp8": 1, "float8": 1}
+
+PHASES = ("decode", "prefill")
+# "native" keeps the config's param_dtype; the others override the datapath
+DTYPES = ("native", "fp8", "int8")
+_DTYPE_PARAM = {"fp8": "fp8", "int8": "int8"}
+
+
+def routing_imbalance(n_experts: int, top_k: int, tokens: float) -> float:
+    """Expected per-tile expert load imbalance from top-k routing.
+
+    With ``tokens`` tokens routed independently to ``top_k`` of ``n_experts``
+    experts, each expert's load is Binomial(tokens*top_k, 1/n_experts); the
+    expected max-over-experts excess over the mean (Gumbel tail of n_experts
+    normals) is ``sigma_rel * sqrt(2 ln n_experts)`` relative std, capped at
+    the all-on-one-expert worst case ``n_experts/top_k - 1``.  Decode
+    (tokens == batch) is far lumpier than prefill (tokens == batch*seq)."""
+    if n_experts <= 1 or top_k >= n_experts:
+        return 0.0
+    p = top_k / n_experts
+    sigma_rel = math.sqrt((1.0 - p) / (max(tokens, 1.0) * p))
+    return min(sigma_rel * math.sqrt(2.0 * math.log(n_experts)),
+               n_experts / top_k - 1.0)
 
 
 class _GraphBuilder:
@@ -58,8 +83,17 @@ class _GraphBuilder:
         )
 
 
-def build_graph(cfg: ArchConfig, seq_len: int) -> WorkloadGraph:
-    """Per-token decode operator graph with data-flow edges."""
+def build_graph(cfg: ArchConfig, seq_len: int,
+                phase: str = "decode") -> WorkloadGraph:
+    """Per-token operator graph with data-flow edges.
+
+    ``phase="decode"`` (default) is the per-token autoregressive graph.
+    ``phase="prefill"`` keeps per-token granularity but attends over the
+    causal average context ``(ctx+1)/2`` — summed over the S prompt tokens
+    that reproduces the O(S^2) seq-parallel attention cost — and is paired
+    by :func:`extract` with full-width expert weight traffic."""
+    if phase not in PHASES:
+        raise ValueError(f"phase must be one of {PHASES}, got {phase!r}")
     g = _GraphBuilder()
     d, dff = cfg.d_model, cfg.d_ff
     hd, H, Hk = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
@@ -73,6 +107,9 @@ def build_graph(cfg: ArchConfig, seq_len: int) -> WorkloadGraph:
     prev = g.add("embed", KIND_EMBED, 0.0, by * cfg.vocab * d, ab * d, -1)
     kinds = cfg.layer_kinds()
     ctx = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    # decode attends over the full cached context; a prefill token at
+    # position t attends over t+1 keys -> causal average (ctx+1)/2
+    ctx = (ctx + 1.0) / 2.0 if phase == "prefill" else ctx
 
     for li, kind in enumerate(kinds):
         n0 = g.add(f"L{li}.norm1", KIND_NORM, 4.0 * d, by * d, ab * d, li, (prev,))
@@ -133,18 +170,20 @@ def build_graph(cfg: ArchConfig, seq_len: int) -> WorkloadGraph:
                 eff = m.d_ff_expert or dff
                 rt = g.add(f"L{li}.router", KIND_ROUTE, 2.0 * d * m.n_experts,
                            by * d * m.n_experts, ab * m.n_experts, li, (n1,))
-                outs = []
-                for e in range(m.n_experts):
-                    frac = m.top_k / m.n_experts  # expected activation rate
-                    outs.append(g.add(
-                        f"L{li}.exp{e}", KIND_MATMUL,
-                        n_mats * 2.0 * d * eff * frac, by * n_mats * d * eff,
-                        ab * d * frac, li, (rt,)))
+                # one grouped expert op (O(layers) nodes, not O(layers *
+                # n_experts)): flops/out_bytes are the top_k active experts,
+                # weight_bytes is the full resident expert bank — aggregates
+                # match the old per-expert expansion exactly
+                outs = [g.add(f"L{li}.experts", KIND_MATMUL,
+                              n_mats * 2.0 * d * eff * m.top_k,
+                              by * n_mats * d * eff * m.n_experts,
+                              ab * d * m.top_k, li, (rt,))]
                 if m.shared_expert:
                     outs.append(g.add(f"L{li}.shared_exp", KIND_MATMUL,
                                       n_mats * 2.0 * d * eff, by * n_mats * d * eff,
                                       ab * d, li, (n1,)))
-                prev = g.add(f"L{li}.moe_combine", KIND_ELEMWISE, d * len(outs), 0.0,
+                n_act = m.top_k + (1 if m.shared_expert else 0)
+                prev = g.add(f"L{li}.moe_combine", KIND_ELEMWISE, d * n_act, 0.0,
                              ab * d, li, tuple(outs))
             else:
                 h1 = mm(f"L{li}.ffn_up", li, n1, d, (n_mats - 1) * dff)
@@ -162,12 +201,38 @@ def build_graph(cfg: ArchConfig, seq_len: int) -> WorkloadGraph:
     return g.build()
 
 
-def extract(cfg: ArchConfig, *, seq_len: int = 2048, batch: int = 1) -> Workload:
-    """Build the full workload descriptor for the DSE plane."""
-    graph = build_graph(cfg, seq_len)
+def extract(cfg: ArchConfig, *, seq_len: int = 2048, batch: int = 1,
+            phase: str = "decode", dtype: str = "native") -> Workload:
+    """Build the full workload descriptor for the DSE plane.
+
+    ``phase``/``dtype`` select the scenario; the defaults
+    (``decode``/``native``) reproduce the pre-scenario extraction bitwise
+    for dense workloads (the repo-wide back-compat doctrine)."""
+    if phase not in PHASES:
+        raise ValueError(f"phase must be one of {PHASES}, got {phase!r}")
+    if dtype not in DTYPES:
+        raise ValueError(f"dtype must be one of {DTYPES}, got {dtype!r}")
+    if dtype != "native":
+        cfg = dataclasses.replace(cfg, param_dtype=_DTYPE_PARAM[dtype])
+    graph = build_graph(cfg, seq_len, phase)
     pc = cfg.param_counts()
     by = _PREC_BYTES.get(cfg.param_dtype, 2)
     weight_bytes = pc["total"] * by
+    # tokens processed per forward step: decode emits one token per sequence,
+    # prefill chews the whole prompt in parallel
+    tokens = batch * (seq_len if phase == "prefill" else 1)
+
+    moe = cfg.moe if any(cfg.moe_on_layer(li)
+                         for li in range(cfg.n_layers)) else None
+    imbalance = (routing_imbalance(moe.n_experts, moe.top_k, float(tokens))
+                 if moe is not None else 0.0)
+    if phase == "prefill" or moe is None:
+        # prefill touches every expert; dense streams the full weights --
+        # same expression as weight_mb so the default scenario's analytic
+        # traffic select stays bitwise identical
+        weight_traffic = weight_bytes
+    else:
+        weight_traffic = pc["active"] * by  # only routed experts stream
 
     total_flops = float(graph.flops.sum())
     k_flops = graph.flops
@@ -184,7 +249,7 @@ def extract(cfg: ArchConfig, *, seq_len: int = 2048, batch: int = 1) -> Workload
 
     act_bytes = 40.0 * cfg.n_layers * cfg.d_model * 2.0   # calibrated k_act=40
     kv_b = cfg.kv_bytes_per_token()
-    total_bytes = weight_bytes / max(1, batch) + kv_b + act_bytes
+    total_bytes = weight_traffic / max(1, tokens) + kv_b + act_bytes
     mem_intensity = min(1.0, (total_bytes / max(total_flops, 1.0)) / 4.0)
 
     # codegen-scale instruction estimate: ~1 vector instr / (lanes*2) flops
@@ -200,7 +265,7 @@ def extract(cfg: ArchConfig, *, seq_len: int = 2048, batch: int = 1) -> Workload
         kv_bytes_per_token=kv_b,
         ssm_state_bytes=cfg.ssm_state_bytes(),
         act_bytes_per_token=act_bytes,
-        seq_len=seq_len, batch=batch,
+        seq_len=seq_len, batch=tokens,
         n_ops=graph.n_ops, instr_count=instr, ilp=ilp,
         mem_intensity=mem_intensity,
         vector_util=vec_f / max(total_flops, 1.0),
@@ -214,6 +279,13 @@ def extract(cfg: ArchConfig, *, seq_len: int = 2048, batch: int = 1) -> Workload
         d_model=cfg.d_model, n_layers=cfg.n_layers, attn_layers=attn_layers,
         xtile_base_bytes=2.0 * cfg.d_model * 2.0 * cfg.n_layers,
         autoregressive=0.0 if cfg.family == "audio" and not cfg.is_encdec else 1.0,
-        spec_decode_ok=1.0 if cfg.family in ("dense", "moe", "hybrid", "vlm", "ssm") else 0.0,
+        spec_decode_ok=(0.0 if phase == "prefill" else  # no draft in prefill
+                        1.0 if cfg.family in ("dense", "moe", "hybrid", "vlm",
+                                              "ssm") else 0.0),
+        phase=1.0 if phase == "prefill" else 0.0,
+        moe_imbalance=imbalance,
+        weight_traffic_mb=weight_traffic / 1e6,
+        dtype_fp8=1.0 if dtype == "fp8" else 0.0,
+        dtype_int8=1.0 if dtype == "int8" else 0.0,
     )
     return Workload(arch_name=cfg.name, features=feats, graph=graph)

@@ -42,9 +42,18 @@ WL_FIELDS: List[str] = [
     "xtile_base_bytes",    # 27 cross-tile bytes/token before mesh scaling
     "autoregressive",      # 28 1.0 for decoder LMs
     "spec_decode_ok",      # 29 speculative decoding applicable
+    # --- scenario axes (PR 10); zeros reproduce the legacy decode vector ---
+    "phase",               # 30 0.0 = decode (per-token), 1.0 = prefill
+    "moe_imbalance",       # 31 expected per-tile expert load imbalance
+    "weight_traffic_mb",   # 32 weights actually streamed per step (MoE-aware)
+    "dtype_fp8",           # 33 datapath override: fp8 weights/activations
+    "dtype_int8",          # 34 datapath override: int8 weights
 ]
 WL_IDX: Dict[str, int] = {n: i for i, n in enumerate(WL_FIELDS)}
 WL_DIM = len(WL_FIELDS)
+# vector length before the scenario axes were appended; legacy archives and
+# recommendation payloads of this length are zero-padded (zeros == defaults)
+WL_DIM_LEGACY = 30
 
 # operator kinds (graph `kind` codes)
 KIND_MATMUL, KIND_CONV, KIND_ATTENTION, KIND_NORM, KIND_ELEMWISE, \
@@ -108,6 +117,8 @@ def as_feature_vector(obj) -> np.ndarray:
                              f"known: {WL_FIELDS}")
         return wl_vector(**{k: float(v) for k, v in obj.items()})
     v = np.asarray(obj, dtype=np.float32).reshape(-1)
+    if v.shape[0] == WL_DIM_LEGACY:  # pre-scenario vector: pad with defaults
+        v = np.concatenate([v, np.zeros(WL_DIM - WL_DIM_LEGACY, np.float32)])
     if v.shape[0] != WL_DIM:
         raise ValueError(f"feature vector must have {WL_DIM} entries "
                          f"(got {v.shape[0]}); field order: {WL_FIELDS}")
